@@ -1,0 +1,77 @@
+"""Paper Fig. 10: overall goodput — Vanilla (homogeneous, per SSM) vs SPIN
+ablations: w/o batching&pipeline, w/o pipeline, full SPIN."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import SSM_NAMES, VOCAB, build_zoo
+from repro.core.pipeline import profile_cost_model
+from repro.core.selector import LBSS, SelectorConfig
+from repro.data.workloads import make_workload
+from repro.serving.engine import EngineConfig, SpinEngine
+
+N_REQ = 8
+GAMMA = 4
+
+
+def run_engine(llm, ssms, selector, cost, *, packed, pipeline, dataset,
+               slots=40):
+    ecfg = EngineConfig(gamma=GAMMA, max_len=192, capacity=N_REQ,
+                        use_packed_verify=packed, use_pipeline=pipeline,
+                        straggler_mitigation=False)
+    eng = SpinEngine(llm, ssms, selector, ecfg, cost_model=cost)
+    reqs = make_workload(dataset, N_REQ, VOCAB, seed=31, scale=0.35)
+    eng.add_requests(reqs)
+    stats = eng.run(max_slots=slots)
+    return stats
+
+
+def vanilla(llm, ssm_single, cost_j, dataset, j):
+    """Homogeneous spec decoding with one SSM type (the common baseline)."""
+    sel = LBSS(SelectorConfig(n_ssms=1, batch_limits=[N_REQ], alpha=1,
+                              beta=1))
+    from repro.core.pipeline import CostModel
+    cost = CostModel(ssm_time_per_token=[cost_j.ssm_time_per_token[j]],
+                     ssm_fixed=[cost_j.ssm_fixed[j]],
+                     llm_fixed=cost_j.llm_fixed,
+                     llm_time_per_token=cost_j.llm_time_per_token,
+                     gamma=GAMMA)
+    return run_engine(llm, [ssm_single], sel, cost, packed=False,
+                      pipeline=False, dataset=dataset)
+
+
+def main(emit):
+    llm, ssms = build_zoo()
+    cost = profile_cost_model(ssms, llm, GAMMA)
+
+    for dataset in ("alpaca", "cp", "mix"):
+        t0 = time.perf_counter()
+        results = {}
+        for j, name in enumerate(SSM_NAMES):
+            s = vanilla(llm, ssms[j], cost, dataset, j)
+            results[f"vanilla[{name}]"] = s["goodput_sim"]
+
+        def spin(packed, pipeline):
+            reqs = make_workload(dataset, N_REQ, VOCAB, seed=31, scale=0.35)
+            sel = LBSS(SelectorConfig(
+                n_ssms=len(ssms), batch_limits=[N_REQ] * len(ssms),
+                alpha=6, beta=2, seed=5),
+                group_of={r.rid: r.dataset for r in reqs})
+            return run_engine(llm, ssms, sel, cost, packed=packed,
+                              pipeline=pipeline, dataset=dataset)
+
+        results["spin_wo_bat_pipe"] = spin(False, False)["goodput_sim"]
+        results["spin_wo_pipe"] = spin(True, False)["goodput_sim"]
+        results["spin_full"] = spin(True, True)["goodput_sim"]
+        us = (time.perf_counter() - t0) * 1e6
+        best_v = max(v for k, v in results.items() if k.startswith("van"))
+        emit(f"fig10_goodput[{dataset}]", us,
+             " ".join(f"{k}={v:.0f}" for k, v in results.items())
+             + f" | spin_vs_best_vanilla={results['spin_full'] / best_v:.2f}x")
+
+
+if __name__ == "__main__":
+    main(lambda n, u, d: print(f"{n},{u:.1f},{d}"))

@@ -1,0 +1,54 @@
+"""Paper Fig. 11: SSM-selection ablation — LBSS vs Greedy(prompt-length) vs
+epsilon-greedy, batching/pipeline disabled (as in the paper)."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import VOCAB, build_zoo
+from repro.core.pipeline import profile_cost_model
+from repro.core.selector import (LBSS, EpsilonGreedy, GreedyPromptLength,
+                                 SelectorConfig)
+from repro.data.workloads import make_workload
+from repro.serving.engine import EngineConfig, SpinEngine
+
+N_REQ = 8
+GAMMA = 4
+
+
+def main(emit):
+    llm, ssms = build_zoo()
+    cost = profile_cost_model(ssms, llm, GAMMA)
+    for dataset in ("alpaca", "cp"):
+        reqs = make_workload(dataset, N_REQ, VOCAB, seed=41, scale=0.35)
+        plens = {r.rid: r.prompt_len for r in reqs}
+        out = {}
+        t0 = time.perf_counter()
+        for name, mk in {
+            "lbss": lambda: LBSS(SelectorConfig(
+                n_ssms=len(ssms), batch_limits=[N_REQ] * len(ssms),
+                alpha=6, beta=2, seed=7),
+                group_of={r.rid: r.dataset for r in reqs}),
+            "greedy": lambda: GreedyPromptLength(SelectorConfig(
+                n_ssms=len(ssms), batch_limits=[2] * len(ssms), seed=7),
+                plens),
+            "eps_greedy": lambda: EpsilonGreedy(SelectorConfig(
+                n_ssms=len(ssms), batch_limits=[N_REQ] * len(ssms),
+                seed=7), eps=0.2),
+        }.items():
+            ecfg = EngineConfig(gamma=GAMMA, max_len=192, capacity=N_REQ,
+                                use_packed_verify=False, use_pipeline=False,
+                                straggler_mitigation=False)
+            eng = SpinEngine(llm, ssms, mk(), ecfg, cost_model=cost)
+            eng.add_requests(make_workload(dataset, N_REQ, VOCAB, seed=41,
+                                           scale=0.35))
+            stats = eng.run(max_slots=40)
+            out[name] = stats["goodput_sim"]
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig11_selector[{dataset}]", us,
+             " ".join(f"{k}={v:.0f}" for k, v in out.items())
+             + f" | lbss_vs_greedy={out['lbss'] / max(out['greedy'], 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main(lambda n, u, d: print(f"{n},{u:.1f},{d}"))

@@ -1,0 +1,110 @@
+"""Shared benchmark infrastructure: the trained model zoo.
+
+Reproduces the paper's setup at CPU scale: one LLM + five heterogeneous
+SSMs (shape-faithful reductions of the LLaMA 68M..1.4B zoo), all trained on
+the two-scale synthetic corpus so acceptance rates genuinely depend on
+(SSM capacity x request difficulty) — the Fig. 2/3 phenomenon.
+
+Models are trained once and cached under results/zoo/ (CheckpointManager);
+delete that directory to retrain.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import spin_llama
+from repro.core import spec_decode as sd
+from repro.data.pipeline import TokenStream
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.optim import AdamW, cosine_schedule
+
+VOCAB = 128
+ZOO_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "zoo")
+
+# (name template cfg, d_model, n_layers) — capacity ladder mirroring
+# LLaMA-68M .. LLaMA-1.4B
+SSM_SPECS = [
+    (spin_llama.LLAMA_68M, 16, 1),
+    (spin_llama.LLAMA_265M, 32, 1),
+    (spin_llama.LLAMA_616M, 48, 2),
+    (spin_llama.LLAMA_1_1B, 64, 2),
+    (spin_llama.LLAMA_1_4B, 96, 3),
+]
+LLM_SPEC = (spin_llama.LLAMA_7B, 128, 3)
+
+
+def _cfg(base, d, L):
+    return reduced(base, d_model=d, n_layers=L, n_heads=4, n_kv_heads=4,
+                   vocab_size=VOCAB, head_dim=d // 4)
+
+
+def _train(cfg, steps: int, seed: int, lr=None) -> dict:
+    # capacity-scaled recipe: bigger models need more steps + gentler lr
+    n = cfg.params_count()
+    if lr is None:
+        lr = 1e-2 if n < 3e5 else 5e-3
+    steps = int(steps * (1.0 + min(1.0, n / 1.5e6)))
+    stream = TokenStream(seed=11, batch=16, seq_len=64, vocab=VOCAB)
+    opt = AdamW(lr=cosine_schedule(lr, 30, steps), weight_decay=0.01)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    state = opt.init(params)
+    step_fn = jax.jit(T.make_train_step(cfg, opt, T.Opts(remat="none")))
+    last = None
+    for s in range(steps):
+        toks, labels = stream.batch_at(s)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        params, state, metrics = step_fn(params, state, batch)
+        last = float(metrics["loss"])
+    print(f"  trained {cfg.name}: {cfg.n_layers}L x {cfg.d_model}d "
+          f"{steps} steps, final loss {last:.3f}", flush=True)
+    return params
+
+
+def build_zoo(steps: int = 250, force: bool = False
+              ) -> Tuple[sd.Bundle, List[sd.Bundle]]:
+    """Returns (llm, [ssm_smallest .. ssm_largest]), trained + cached."""
+    os.makedirs(ZOO_DIR, exist_ok=True)
+    llm_cfg = _cfg(*LLM_SPEC)
+    ssm_cfgs = [_cfg(*s) for s in SSM_SPECS]
+    mgr = CheckpointManager(ZOO_DIR, keep=1)
+    template = {
+        "llm": T.abstract_params(llm_cfg),
+        **{f"ssm{i}": T.abstract_params(c) for i, c in enumerate(ssm_cfgs)},
+    }
+    if not force and mgr.latest_step() is not None:
+        try:
+            trees, _ = mgr.restore(template)
+            llm = sd.Bundle(llm_cfg, trees["llm"])
+            ssms = [sd.Bundle(c, trees[f"ssm{i}"])
+                    for i, c in enumerate(ssm_cfgs)]
+            print("[zoo] restored cached models")
+            return llm, ssms
+        except Exception as e:                          # noqa: BLE001
+            print(f"[zoo] cache miss ({e}); retraining")
+    t0 = time.time()
+    print("[zoo] training LLM + 5 heterogeneous SSMs on the synthetic "
+          "corpus ...")
+    trees = {"llm": _train(llm_cfg, int(steps * 1.5), seed=0)}
+    for i, c in enumerate(ssm_cfgs):
+        trees[f"ssm{i}"] = _train(c, steps, seed=i + 1)
+    mgr.save(0, trees)
+    print(f"[zoo] done in {time.time() - t0:.0f}s")
+    llm = sd.Bundle(llm_cfg, trees["llm"])
+    ssms = [sd.Bundle(c, trees[f"ssm{i}"]) for i, c in enumerate(ssm_cfgs)]
+    return llm, ssms
+
+
+SSM_NAMES = ["68m", "265m", "616m", "1.1b", "1.4b"]
+
+
+def bench_record(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,78 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dryrun
+JSONs (merges the baseline sweep and any remainder/fix-up files)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_all(paths):
+    by_key = {}
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        with open(p) as f:
+            for r in json.load(f):
+                by_key[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return by_key
+
+
+def dryrun_table(by_key):
+    out = ["| arch | shape | 16x16 | 2x16x16 | peak GB/dev (1pod) | "
+           "compile s |", "|---|---|---|---|---|---|"]
+    archs, shapes = [], []
+    for (a, s, mp) in by_key:
+        if a not in archs:
+            archs.append(a)
+        if s not in shapes:
+            shapes.append(s)
+    for a in archs:
+        for s in shapes:
+            r1 = by_key.get((a, s, False))
+            r2 = by_key.get((a, s, True))
+            if r1 is None and r2 is None:
+                continue
+            def st(r):
+                if r is None:
+                    return "—"
+                if r["status"] == "skipped":
+                    return "skip"
+                return "OK" if r["status"] == "ok" else "**FAIL**"
+            peak = ""
+            comp = ""
+            if r1 and r1["status"] == "ok":
+                peak = f"{r1['memory']['peak_bytes'] / 2**30:.2f}"
+                comp = f"{r1.get('compile_s', 0):.0f}"
+            out.append(f"| {a} | {s} | {st(r1)} | {st(r2)} | {peak} | "
+                       f"{comp} |")
+    return "\n".join(out)
+
+
+def roofline_table(by_key):
+    sys.path.insert(0, os.path.dirname(__file__))
+    from roofline import render, table
+    records = [r for (a, s, mp), r in by_key.items() if not mp]
+    rows = table(records)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return render(rows)
+
+
+def main():
+    paths = sorted(glob.glob("results/dryrun_*.json"))
+    by_key = load_all(paths)
+    n_ok = sum(1 for r in by_key.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in by_key.values() if r["status"] == "skipped")
+    n_fail = sum(1 for r in by_key.values() if r["status"] == "FAILED")
+    print(f"<!-- {len(by_key)} cells: {n_ok} ok / {n_skip} skipped / "
+          f"{n_fail} failed -->\n")
+    print("### Dry-run matrix\n")
+    print(dryrun_table(by_key))
+    print("\n### Roofline (single-pod, per §Roofline terms)\n")
+    print(roofline_table(by_key))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""§Roofline report: reads results/dryrun_baseline.json (written by
+launch/dryrun.py --all --roofline) and renders the per-(arch x shape)
+three-term roofline table used in EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_baseline.json")
+
+
+def load(path=RESULTS):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(records, markdown=True):
+    rows = []
+    for r in records:
+        if r.get("multi_pod") or r.get("status") != "ok" \
+                or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        terms = {"compute": rf["t_compute_s"], "memory": rf["t_memory_s"],
+                 "collective": rf["t_collective_s"]}
+        dom = rf["dominant"]
+        bound = max(terms.values())
+        # roofline fraction: useful model flops time / bound time
+        t_model = r["model_flops"] / (r["n_chips"] * 197e12)
+        frac = t_model / bound if bound > 0 else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_comp": terms["compute"], "t_mem": terms["memory"],
+            "t_coll": terms["collective"], "dominant": dom,
+            "useful": r.get("useful_flops_frac", 0.0),
+            "roofline_frac": frac,
+            "peak_gb": (r["memory"]["peak_bytes"] or 0) / 2**30,
+        })
+    return rows
+
+
+def render(rows):
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | 6ND/HLO | roofline frac | peak GB/dev |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_comp']:.3g} | "
+            f"{r['t_mem']:.3g} | {r['t_coll']:.3g} | {r['dominant']} | "
+            f"{r['useful']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['peak_gb']:.2f} |")
+    return "\n".join(out)
+
+
+def main(emit=None):
+    if not os.path.exists(RESULTS):
+        print(f"(roofline: {RESULTS} not found — run "
+              "python -m repro.launch.dryrun --all --roofline --json "
+              "results/dryrun_baseline.json)")
+        return
+    rows = table(load())
+    if emit:
+        for r in rows:
+            emit(f"roofline[{r['arch']}/{r['shape']}]", 0.0,
+                 f"dom={r['dominant']} frac={r['roofline_frac']:.3f} "
+                 f"t=({r['t_comp']:.3g},{r['t_mem']:.3g},"
+                 f"{r['t_coll']:.3g})s peak={r['peak_gb']:.2f}GB")
+    else:
+        print(render(rows))
+
+
+if __name__ == "__main__":
+    main()

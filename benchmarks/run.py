@@ -1,0 +1,50 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per record.  Wall-clock numbers are
+CPU (reduced models, trends); "goodput" numbers use the calibrated event
+simulator (see DESIGN.md §8); full-scale numbers live in the roofline
+section (compiled dry-run artifacts)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_batching, bench_heterogeneity,
+                            bench_overall, bench_pipeline, bench_selector,
+                            bench_verification, roofline)
+
+    records = []
+
+    def emit(name, us, derived):
+        line = f"{name},{us:.1f},{derived}"
+        records.append(line)
+        print(line, flush=True)
+
+    sections = [
+        ("fig2/3 heterogeneity", bench_heterogeneity.main),
+        ("fig4 batching", bench_batching.main),
+        ("fig10 overall", bench_overall.main),
+        ("fig11 selector", bench_selector.main),
+        ("fig12 verification", bench_verification.main),
+        ("fig13 pipeline", bench_pipeline.main),
+        ("roofline", roofline.main),
+    ]
+    failures = 0
+    for name, fn in sections:
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn(emit)
+        except Exception:                                  # noqa: BLE001
+            failures += 1
+            print(f"# SECTION FAILED: {name}", flush=True)
+            traceback.print_exc()
+    print(f"# {len(records)} records, {failures} failed sections")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

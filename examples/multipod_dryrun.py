@@ -1,0 +1,15 @@
+"""Lower + compile one (arch x shape) cell on the production meshes.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py \
+        --arch mixtral-8x22b --shape train_4k --both-meshes --roofline
+
+Thin entry point over repro.launch.dryrun (which must own the process: it
+sets the 512-placeholder-device XLA flag before jax initializes).
+"""
+
+import sys
+
+from repro.launch.dryrun import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""End-to-end training driver: train the LLM + heterogeneous SSM zoo.
+
+    PYTHONPATH=src python examples/train_distill_ssm.py [--steps 250]
+
+This is the paper's missing substrate made explicit: the five SSMs
+(68M..1.4B shape-faithful reductions) and the LLM are trained on the
+two-scale synthetic corpus, producing capacity-dependent acceptance rates
+(small SSM aces easy requests, large SSM wins hard ones — Fig. 2/3).
+Artifacts are cached under results/zoo/ and reused by benchmarks.
+
+For full-scale training of any assigned arch on a pod, the same loop runs
+through launch/train.py (checkpointed, crash-recovering, mesh-sharded).
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks")
+sys.path.insert(0, ".")
+
+from benchmarks.common import SSM_NAMES, build_zoo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--force", action="store_true", help="retrain")
+    args = ap.parse_args()
+    llm, ssms = build_zoo(steps=args.steps, force=args.force)
+    print(f"\nLLM: {llm.cfg.n_layers}L x {llm.cfg.d_model}d "
+          f"({llm.cfg.params_count() / 1e3:.0f}k params)")
+    for n, s in zip(SSM_NAMES, ssms):
+        print(f"SSM[{n}]: {s.cfg.n_layers}L x {s.cfg.d_model}d "
+              f"({s.cfg.params_count() / 1e3:.0f}k params)")
+
+
+if __name__ == "__main__":
+    main()

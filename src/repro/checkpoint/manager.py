@@ -1,0 +1,162 @@
+"""Fault-tolerant checkpointing.
+
+Design for 1000+ nodes (and tested at CPU scale here):
+
+* Atomic: writes go to ``step_<n>.tmp/`` then os.replace() to ``step_<n>/``;
+  a crash mid-write can never corrupt the latest checkpoint.
+* Versioned + retention: ``latest`` is a pointer file (written last);
+  ``keep`` newest checkpoints are retained.
+* Async: ``save(..., blocking=False)`` hands the host transfer to a
+  background thread so the train loop keeps stepping (overlap with compute).
+* Elastic / resharding restore: arrays are stored UNSHARDED per leaf (numpy,
+  npz per pytree leaf path); ``restore(..., shardings=...)`` re-places them
+  under ANY mesh, so a job restarted on a different topology (e.g. after
+  losing a pod) resumes seamlessly.  At real multi-pod scale the same
+  layout maps onto a distributed filesystem; per-leaf files keep writes
+  parallel across hosts.
+* Self-describing: a JSON manifest stores the step, leaf paths and dtypes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.save_failures = 0
+
+    # ------------------------------------------------------------- save --
+    def save(self, step: int, tree: Any, blocking: bool = True,
+             max_retries: int = 3):
+        host_tree = jax.tree.map(np.asarray, tree)   # device -> host copy
+
+        def _write():
+            for attempt in range(max_retries):
+                try:
+                    self._write_once(step, host_tree)
+                    return
+                except OSError:
+                    self.save_failures += 1
+                    time.sleep(0.01 * (attempt + 1))
+            raise RuntimeError(f"checkpoint save failed after "
+                               f"{max_retries} retries")
+
+        if blocking:
+            _write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def _write_once(self, step: int, host_tree):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": []}
+        for key, leaf in _flatten_with_paths(host_tree):
+            fn = key.replace("/", "__") + ".npy"
+            arr = np.asarray(leaf)
+            dtype_name = str(arr.dtype)
+            if dtype_name == "bfloat16":       # npy can't round-trip bf16
+                arr = arr.view(np.uint16)
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"].append(
+                {"key": key, "file": fn, "dtype": dtype_name})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        # pointer file written LAST -> atomic latest
+        with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.dir, "latest.tmp"),
+                   os.path.join(self.dir, "latest"))
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore --
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "latest")
+        if not os.path.exists(p):
+            steps = self.all_steps()
+            return steps[-1] if steps else None
+        with open(p) as f:
+            step = int(f.read().strip())
+        if not os.path.exists(os.path.join(self.dir, f"step_{step}")):
+            steps = self.all_steps()           # pointer ahead of a crash
+            return steps[-1] if steps else None
+        return step
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``template``.  If ``shardings`` is
+        given (a pytree of NamedSharding, possibly for a DIFFERENT mesh than
+        the one the checkpoint was written under), leaves are placed with
+        jax.device_put — this is the elastic-resharding path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_key = {l["key"]: (l["file"], l["dtype"])
+                  for l in manifest["leaves"]}
+        flat = _flatten_with_paths(template)
+        shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                      else [None] * len(flat))
+        out = []
+        for (key, leaf), sh in zip(flat, shard_flat):
+            fn, dtype_name = by_key[key]
+            arr = np.load(os.path.join(d, fn))
+            if dtype_name == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        treedef = jax.tree.structure(template)
+        return jax.tree.unflatten(treedef, out), step

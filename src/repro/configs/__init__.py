@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCHS, get, reduced_for
+
+__all__ = ["ARCHS", "get", "reduced_for"]

@@ -1,0 +1,8 @@
+"""SPIN's contribution: heterogeneous speculative decoding.
+
+  spec_decode  draft / verify / accept-reject primitives (lossless)
+  selector     learning-based SSM selection (LBSS, paper Alg. 1+2) + baselines
+  decompose    request decomposition for fast batch verification (paper SV-A)
+  pipeline     micro-batch speculation/verification pipelining (paper SV-B)
+  switching    fast SSM switching via destination KV pre-compute (paper SIV-C)
+"""

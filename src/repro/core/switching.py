@@ -1,0 +1,103 @@
+"""Fast SSM switching (paper §IV-C).
+
+Switching request i from SSM a to SSM b requires re-computing b's KV cache
+over all tokens generated so far (the switching cost c_{i,j}(t), which grows
+with context length).  The insight: newly drafted tokens cannot change the
+KV of existing tokens, so the destination's cache can be pre-computed IN
+PARALLEL with ongoing drafting on the source SSM.
+
+During exploration the destination is known (chunk schedule); during
+exploitation we pre-compute for the *predicted* destination = argmax
+estimated goodput (selector.predicted_destination).  The engine calls
+``precompute`` during SSM idle slots; a prediction hit makes the switch
+free, a miss falls back to synchronous recompute (cost accounted).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class PrecomputedKV:
+    ssm_idx: int
+    upto_length: int
+    cache: object
+    lengths: object
+
+
+class SwitchManager:
+    """Tracks per-request destination pre-computation and switch costs."""
+
+    def __init__(self, ssm_bundles):
+        self.ssms = ssm_bundles
+        self.pre: Dict[int, PrecomputedKV] = {}
+        self.hits = 0
+        self.misses = 0
+        self.recompute_tokens = 0    # tokens re-prefillled synchronously
+        self.saved_tokens = 0        # tokens whose recompute was hidden
+
+    @staticmethod
+    def _padded(tokens, length: int, align: int = 16):
+        """Pad the token row to a bucketed shape (bounds jit retraces)."""
+        import math
+        import numpy as np
+        pb = max(align, int(math.ceil(length / align) * align))
+        row = np.zeros((1, pb), np.int32)
+        row[0, :length] = np.asarray(tokens[:length], np.int32)
+        return jnp.asarray(row)
+
+    def precompute(self, request_id: int, dst: int, tokens, length: int,
+                   max_len: int):
+        """Prefill request context on the destination SSM (issued during
+        source-SSM idle time; JAX async dispatch overlaps it)."""
+        b = self.ssms[dst]
+        toks = self._padded(tokens, length)
+        lengths = jnp.asarray([length], jnp.int32)
+        _, cache = b.prefill(toks, lengths, max_len)
+        self.pre[request_id] = PrecomputedKV(
+            ssm_idx=dst, upto_length=length, cache=cache, lengths=lengths)
+
+    def switch(self, request_id: int, dst: int, tokens, length: int,
+               max_len: int) -> Tuple[object, int]:
+        """Returns (cache_on_dst, tokens_recomputed_synchronously)."""
+        pre = self.pre.pop(request_id, None)
+        if pre is not None and pre.ssm_idx == dst:
+            self.hits += 1
+            delta = length - pre.upto_length
+            self.saved_tokens += pre.upto_length
+            if delta <= 0:
+                return pre.cache, 0
+            # catch up the few tokens drafted since pre-compute (bucketed
+            # width; over-written garbage slots invalidated afterwards)
+            from repro.core.spec_decode import invalidate_slots_jit
+            b = self.ssms[dst]
+            toks = self._padded(tokens[pre.upto_length:length], delta,
+                                align=8)
+            cache = pre.cache
+            lengths = jnp.asarray([pre.upto_length], jnp.int32)
+            _, cache = b.decode(cache, toks, lengths)
+            cache = invalidate_slots_jit(
+                cache, jnp.asarray([length], jnp.int32),
+                jnp.asarray([pre.upto_length + toks.shape[1]], jnp.int32))
+            self.recompute_tokens += delta
+            return cache, delta
+        # miss: full synchronous recompute
+        self.misses += 1
+        b = self.ssms[dst]
+        toks = self._padded(tokens, length)
+        lengths = jnp.asarray([length], jnp.int32)
+        _, cache = b.prefill(toks, lengths, max_len)
+        self.recompute_tokens += length
+        return cache, length
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "recompute_tokens": self.recompute_tokens,
+                "saved_tokens": self.saved_tokens}

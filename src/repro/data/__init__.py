@@ -1,0 +1,5 @@
+from repro.data.workloads import Dataset, Request, make_workload
+from repro.data.pipeline import TokenStream, synthetic_corpus_batch
+
+__all__ = ["Dataset", "Request", "make_workload", "TokenStream",
+           "synthetic_corpus_batch"]

@@ -1,0 +1,77 @@
+"""Serving workloads mirroring the paper's three datasets.
+
+Alpaca / ChatGPT-Prompts (CP) / Chatbot-Instruction-Prompts (CIP) differ in
+request difficulty and prompt-length distributions (paper §II-B / §VI-A):
+Alpaca is the hardest (large SSMs win), CP the easiest (small SSMs win),
+CIP in between; Mix combines all three.  We reproduce those *distributions*
+synthetically with an explicit per-request difficulty knob that controls
+how predictable the continuation is (see data/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.data.pipeline import _backbone, synthetic_sequence
+
+
+@dataclasses.dataclass
+class Dataset:
+    name: str
+    difficulty_mean: float
+    difficulty_std: float
+    prompt_len_range: tuple
+    output_len_range: tuple
+
+
+DATASETS: Dict[str, Dataset] = {
+    # hardest: long, information-dense instructions (hard mode)
+    "alpaca": Dataset("alpaca", 0.85, 0.05, (24, 96), (24, 96)),
+    # easiest: short, repetitive chat prompts (easy mode)
+    "cp": Dataset("cp", 0.05, 0.03, (8, 32), (16, 48)),
+    # intermediate: mix of modes
+    "cip": Dataset("cip", 0.45, 0.35, (16, 64), (16, 64)),
+}
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    dataset: str
+    difficulty: float
+    prompt: np.ndarray          # (P,) int32
+    max_new: int
+    # runtime state
+    emitted: Optional[List[int]] = None
+    done: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+def make_workload(name: str, n_requests: int, vocab: int, seed: int = 0,
+                  scale: float = 1.0) -> List[Request]:
+    """name in {alpaca, cp, cip, mix}.  ``scale`` shrinks lengths for CPU
+    tests."""
+    rng = np.random.default_rng(seed)
+    table = _backbone(np.random.default_rng(seed ^ 0x5EED), vocab)
+    if name == "mix":
+        names = rng.choice(list(DATASETS), size=n_requests)
+    else:
+        names = [name] * n_requests
+    out = []
+    for i, ds_name in enumerate(names):
+        ds = DATASETS[str(ds_name)]
+        diff = float(np.clip(
+            rng.normal(ds.difficulty_mean, ds.difficulty_std), 0.0, 0.9))
+        plen = int(max(4, rng.integers(*ds.prompt_len_range) * scale))
+        olen = int(max(4, rng.integers(*ds.output_len_range) * scale))
+        prompt = synthetic_sequence(rng, plen, vocab, table, diff)
+        out.append(Request(rid=i, dataset=str(ds_name), difficulty=diff,
+                           prompt=prompt.astype(np.int32), max_new=olen,
+                           emitted=[]))
+    return out

@@ -1,0 +1,253 @@
+"""Logical-axis sharding (MaxText-style rule table).
+
+Every parameter / activation / cache dimension carries a *logical* axis name
+(see models/params.py specs and ``constrain`` call sites).  A rule table maps
+logical names to mesh-axis candidates; assignment is greedy by priority with
+divisibility checks, so one table serves every architecture (e.g. kv_heads=8
+cannot shard over model=16 -> the cache sequence dim takes the model axis
+instead).  Hillclimbing sharding = swapping rule tables (see launch/dryrun).
+
+``constrain`` is a no-op outside an active rule context, so model code runs
+unchanged in single-device CPU tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Candidate = Optional[Tuple[str, ...]]     # mesh axes for one dim (None = repl)
+Rules = Dict[str, List[Candidate]]
+
+# Lower priority = assigned first (gets first pick of mesh axes).
+PRIORITY: Dict[str, int] = {
+    "batch": 10, "act_batch": 10, "cache_batch": 10,
+    "vocab": 20, "heads": 20, "kv_heads": 22, "experts": 20, "mlp": 24,
+    "ssm_in": 20, "ssm_inner": 20, "ssm_conv": 20, "xl_up": 20,
+    "xl_inner": 26, "xl_inner2": 20, "ssm_heads": 20,
+    "embed": 30, "act_embed": 30, "exp_embed": 30,
+    "cache_seq": 40, "seq": 45, "exp_cap": 18,
+}
+DEFAULT_PRIORITY = 50
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def assign_spec(rules: Rules, dims: Sequence[Optional[str]],
+                shape: Sequence[int], mesh: Mesh) -> PartitionSpec:
+    """Pick mesh axes per dim: greedy by priority, divisibility-checked,
+    each mesh axis used at most once."""
+    order = sorted(range(len(dims)),
+                   key=lambda i: PRIORITY.get(dims[i] or "", DEFAULT_PRIORITY))
+    used: set = set()
+    chosen: List[Candidate] = [None] * len(dims)
+    for i in order:
+        name = dims[i]
+        if name is None:
+            continue
+        for cand in rules.get(name, [None]):
+            if cand is None:
+                break
+            cand = tuple(cand)
+            if any(a in used for a in cand):
+                continue
+            if any(a not in mesh.shape for a in cand):
+                continue
+            if shape[i] % _axes_size(mesh, cand) != 0:
+                continue
+            chosen[i] = cand
+            used.update(cand)
+            break
+    parts = [c if c is None else (c[0] if len(c) == 1 else c) for c in chosen]
+    return PartitionSpec(*parts)
+
+
+# Rule tables ---------------------------------------------------------------
+
+def train_rules(multi_pod: bool = False) -> Rules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        # activations
+        "batch": [dp, ("data",), None],
+        "seq": [None],
+        "act_embed": [None],
+        "exp_cap": [dp, ("data",), None],
+        # weights: FSDP over data, TP over model
+        "embed": [("data",), None],
+        "exp_embed": [("data",), None],
+        "vocab": [("model",), None],
+        "heads": [("model",), None],
+        "kv_heads": [("model",), None],
+        "mlp": [("model",), None],
+        "experts": [("model",), None],
+        "ssm_in": [("model",), None],
+        "ssm_inner": [("model",), None],
+        "ssm_conv": [("model",), None],
+        "xl_up": [("model",), None],
+        "xl_inner": [("data",), None],
+        "xl_inner2": [("model",), None],
+        "ssm_heads": [("model",), None],
+        # caches (unused in train)
+        "cache_batch": [dp, ("data",), None],
+        "cache_seq": [None],
+    }
+
+
+def serve_rules(multi_pod: bool = False) -> Rules:
+    """Inference: batch DP over (pod,)data; TP over model; KV cache sharded
+    over batch x (kv_heads | seq)."""
+    r = train_rules(multi_pod)
+    r.update({
+        "cache_seq": [("model",), None],     # used when kv_heads can't shard
+        "kv_heads": [("model",), None],
+        "seq": [None],
+    })
+    return r
+
+
+# Hillclimb rule variants (see EXPERIMENTS.md §Perf) ------------------------
+
+def train_rules_seqparallel(multi_pod: bool = False) -> Rules:
+    """Megatron-style sequence parallelism: residual-stream activations are
+    sharded over `model` along the sequence axis, so norms/elementwise ops
+    and their HBM traffic shrink by the TP degree (all-gather moves to the
+    attention/mlp boundary)."""
+    r = train_rules(multi_pod)
+    r["seq"] = [("model",), None]
+    return r
+
+
+def train_rules_noremat_zero1(multi_pod: bool = False) -> Rules:
+    """ZeRO-1 style: parameters replicated over data (only optimizer state
+    sharded), showing what FSDP weight-sharding buys (baseline ablation)."""
+    r = train_rules(multi_pod)
+    for k in ("embed", "xl_inner"):
+        r[k] = [None]
+    return r
+
+
+def serve_rules_seqshard(multi_pod: bool = False) -> Rules:
+    """Flash-decode style: KV cache sequence sharded over `model` (for GQA
+    archs whose kv_heads don't divide the TP degree); partial softmax is
+    combined by XLA's reduction collectives."""
+    r = serve_rules(multi_pod)
+    r["cache_seq"] = [("model",), None]
+    r["kv_heads"] = [None]
+    return r
+
+
+def serve_rules_batch_model(multi_pod: bool = False) -> Rules:
+    """Decode batch sharded over BOTH data and model axes (weights fully
+    replicated over model): trades weight memory for zero TP collectives in
+    the per-token matmuls."""
+    r = serve_rules(multi_pod)
+    r["batch"] = [("data", "model"), ("data",), None]
+    r["cache_batch"] = [("data", "model"), ("data",), None]
+    for k in ("heads", "kv_heads", "mlp", "experts", "vocab", "ssm_in",
+              "ssm_inner", "ssm_conv", "xl_up", "xl_inner2", "ssm_heads"):
+        r[k] = [None]
+    return r
+
+
+def serve_rules_zero1(multi_pod: bool = False) -> Rules:
+    """Inference: weights replicated over `data` (TP-only sharding) — kills
+    the per-layer FSDP weight all-gathers at the cost of weight memory;
+    viable when params/TP-degree fits HBM."""
+    r = serve_rules(multi_pod)
+    for k in ("embed", "exp_embed", "xl_inner"):
+        r[k] = [None]
+    return r
+
+
+def serve_rules_attn_repl(multi_pod: bool = False) -> Rules:
+    """MoE serving hybrid: small attention/router weights replicated over
+    `data` (no per-layer gather); the big expert tensors stay FSDP-sharded
+    (their gather is unavoidable without weight quantization)."""
+    r = serve_rules(multi_pod)
+    r["embed"] = [None]          # attention + embedding tables replicated
+    r["exp_embed"] = [("data",), None]
+    return r
+
+
+def serve_rules_seq_data(multi_pod: bool = False) -> Rules:
+    """Long-context prefill: shard the SEQUENCE over `data` (context/ring
+    style) instead of batch — for cells where batch < data axis."""
+    r = serve_rules(multi_pod)
+    r["seq"] = [("data",), None]
+    r["cache_seq"] = [("data",), ("model",), None]
+    return r
+
+
+RULE_VARIANTS = {
+    "train": train_rules,
+    "serve": serve_rules,
+    "train_seqparallel": train_rules_seqparallel,
+    "train_zero1": train_rules_noremat_zero1,
+    "serve_seqshard": serve_rules_seqshard,
+    "serve_batch_model": serve_rules_batch_model,
+    "serve_zero1": serve_rules_zero1,
+    "serve_attn_repl": serve_rules_attn_repl,
+    "serve_seq_data": serve_rules_seq_data,
+}
+
+
+# Context -------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Rules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Rules):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active() -> bool:
+    return _CTX.mesh is not None
+
+
+def constrain(x, *dims: Optional[str]):
+    """with_sharding_constraint through the active rule table (no-op if none).
+    Trailing dims not named are treated as replicated."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    names = list(dims) + [None] * (x.ndim - len(dims))
+    spec = assign_spec(_CTX.rules, names, x.shape, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+# Sharding trees ------------------------------------------------------------
+
+def sharding_tree(mesh: Mesh, rules: Rules, axes_tree, abstract_tree):
+    """NamedSharding pytree for jit in_/out_shardings.
+
+    axes_tree: tree of logical-axis tuples (same structure as abstract_tree).
+    abstract_tree: tree of ShapeDtypeStructs (for divisibility checks).
+    """
+    def one(axes, ab):
+        return NamedSharding(mesh, assign_spec(rules, axes, ab.shape, mesh))
+    return jax.tree.map(one, axes_tree, abstract_tree,
+                        is_leaf=lambda a: isinstance(a, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in a))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PartitionSpec())

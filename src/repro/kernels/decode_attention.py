@@ -1,0 +1,102 @@
+"""GQA decode attention: one query token per row vs a long KV cache.
+
+This is the memory-bound hot loop of serving (arithmetic intensity ~ 2
+flops/byte): the kernel's job is to stream K/V HBM->VMEM in large tiles
+exactly once.  grid = (B, S/BK); per-row running softmax in VMEM scratch;
+slots >= length masked (cache tail).
+
+Block sizing: BK=512 streams (2*BK*Kh*D) bytes per step; with Kh=8, D=128
+bf16 that is 2 MiB/tile -> comfortably double-buffered in 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, nk: int, bk: int, scale: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    kv_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+
+    @pl.when(j * bk < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale       # (H, D)
+        k = k_ref[0].astype(jnp.float32)               # (BK, Kh, D)
+        v = v_ref[0].astype(jnp.float32)
+        H, D = q.shape
+        BK, Kh, _ = k.shape
+        G = H // Kh
+        qg = q.reshape(Kh, G, D)
+        s = jnp.einsum("kgd,skd->kgs", qg, k)          # (Kh, G, BK)
+        mask = kv_pos < length
+        s = jnp.where(mask[None, None, :], s, NEG)
+        m_prev = m_ref[...].reshape(Kh, G)
+        l_prev = l_ref[...].reshape(Kh, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, -1e29)
+        p = jnp.where(mask[None, None, :], jnp.exp(s - m_safe[..., None]),
+                      0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("kgs,skd->kgd", p, v)
+        acc_ref[...] = (acc_ref[...].reshape(Kh, G, D) * corr[..., None]
+                        + pv).reshape(Kh * G, D)
+        m_ref[...] = m_new.reshape(1, Kh * G)
+        l_ref[...] = l_new.reshape(1, Kh * G)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[...].reshape(-1)
+        o = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        o_ref[0, ...] = jnp.where((l > 0)[:, None], o, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k, v, lengths, *, bk: int = 512,
+                     interpret: bool = False):
+    """q: (B, H, D); k, v: (B, S, Kh, D); lengths: (B,).  Returns (B,H,D)."""
+    B, H, D = q.shape
+    S, Kh = k.shape[1], k.shape[2]
+    scale = 1.0 / np.sqrt(D)
+    S_p = int(np.ceil(S / bk) * bk)
+    kp = jnp.pad(k, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    nk = S_p // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, bk=bk, scale=scale),
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, H, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, Kh, D), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, bk, Kh, D), lambda b, j: (b, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, H), jnp.float32),
+            pltpu.VMEM((1, H), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, kp, vp)
+    return out

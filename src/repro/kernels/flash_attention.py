@@ -1,0 +1,117 @@
+"""Causal (optionally sliding-window) flash attention for prefill.
+
+grid = (B, S/BQ, S/BK): KV is the sequential axis; future blocks (j*BK >
+(i+1)*BQ) and blocks entirely outside the sliding window are skipped — for
+SWA the per-query-block work is O(window), giving the sub-quadratic prefill
+mixtral's long_500k cell relies on.  Running (m, l, acc) in VMEM scratch;
+q/k/v tiles in VMEM, f32 accumulation, MXU-shaped dots (BQ=BK=128, D=128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, nk: int, bq: int, bk: int, scale: float, window: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = i * bq + jax.lax.iota(jnp.int32, bq)
+    kv_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+    causal_possible = j * bk <= (i + 1) * bq - 1
+    in_window = True if not window else \
+        (j + 1) * bk - 1 > i * bq - window
+
+    @pl.when(causal_possible & in_window)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale       # (BQ, H, D)
+        k = k_ref[0].astype(jnp.float32)               # (BK, Kh, D)
+        v = v_ref[0].astype(jnp.float32)
+        BQ, H, D = q.shape
+        BK, Kh, _ = k.shape
+        G = H // Kh
+        qg = q.reshape(BQ, Kh, G, D)
+        s = jax.lax.dot_general(
+            qg.transpose(1, 2, 0, 3).reshape(Kh, G * BQ, D),
+            k.transpose(1, 2, 0),
+            (((2,), (1,)), ((0,), (0,)))).reshape(Kh, G, BQ, BK)
+        s = s.transpose(2, 0, 1, 3)                    # (BQ, Kh, G, BK)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(mask[:, None, None, :], s, NEG)
+
+        m_prev = m_ref[...].reshape(BQ, Kh, G)
+        l_prev = l_ref[...].reshape(BQ, Kh, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, -1e29)
+        p = jnp.where(mask[:, None, None, :],
+                      jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.transpose(1, 2, 0, 3).reshape(Kh, G * BQ, BK),
+            v.transpose(1, 0, 2),
+            (((2,), (1,)), ((0,), (0,)))).reshape(Kh, G, BQ, D)
+        pv = pv.transpose(2, 0, 1, 3)
+        acc_ref[...] = (acc_ref[...].reshape(BQ, Kh, G, D) * corr[..., None]
+                        + pv).reshape(BQ, Kh * G, D)
+        m_ref[...] = m_new.reshape(BQ, Kh * G)
+        l_ref[...] = l_new.reshape(BQ, Kh * G)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+        o_ref[0, ...] = jnp.where((l > 0)[..., None], o,
+                                  0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, window: int = 0, bq: int = 128,
+                    bk: int = 128, interpret: bool = False):
+    """q: (B, S, H, D); k, v: (B, S, Kh, D).  Causal; optional SWA."""
+    B, S, H, D = q.shape
+    Kh = k.shape[2]
+    scale = 1.0 / np.sqrt(D)
+    S_p = int(np.ceil(S / max(bq, bk)) * max(bq, bk))
+    qp = jnp.pad(q, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    nq, nk = S_p // bq, S_p // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, bq=bq, bk=bk, scale=scale,
+                          window=window),
+        grid=(B, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, H, D), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, bk, Kh, D), lambda b, i, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, bk, Kh, D), lambda b, i, j: (b, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, H, D), lambda b, i, j: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S_p, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, H), jnp.float32),
+            pltpu.VMEM((bq, H), jnp.float32),
+            pltpu.VMEM((bq, H, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :S]

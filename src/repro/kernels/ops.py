@@ -1,0 +1,38 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: False on TPU (compiled Mosaic), True
+elsewhere (kernel body executed in Python on CPU — how this repo validates
+TPU kernels without TPU hardware)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.verify_attention import verify_attention as _verify
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def verify_attention(q, k, v, q_seg, q_pos, kv_seg, kv_pos, *,
+                     bq: int = 128, bk: int = 128, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _verify(q, k, v, q_seg, q_pos, kv_seg, kv_pos, bq=bq, bk=bk,
+                   interpret=interpret)
+
+
+def flash_attention(q, k, v, *, window: int = 0, bq: int = 128,
+                    bk: int = 128, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _flash(q, k, v, window=window, bq=bq, bk=bk, interpret=interpret)
+
+
+def decode_attention(q, k, v, lengths, *, bk: int = 512, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _decode(q, k, v, lengths, bk=bk, interpret=interpret)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are asserted against across shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+
+
+def verify_attention_ref(q, k, v, q_seg, q_pos, kv_seg, kv_pos):
+    """SPIN packed verification attention — direct Eq. (13).
+
+    q: (Tq, H, D); k, v: (Tkv, Kh, D); segs/pos: int32 1-D.
+    a_{i,j} = F(q_i,k_j) * I[seg_j == seg_i] / sum_j' F(q_i,k_j') I[...]
+    with causal masking kv_pos <= q_pos and empty slots seg == -1.
+    """
+    Tq, H, Dh = q.shape
+    Kh = k.shape[1]
+    G = H // Kh
+    qf = q.astype(jnp.float32).reshape(Tq, Kh, G, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("qkgd,skd->qkgs", qf, kf) / np.sqrt(Dh)
+    mask = (q_seg[:, None] == kv_seg[None, :]) \
+        & (kv_seg[None, :] >= 0) \
+        & (kv_pos[None, :] <= q_pos[:, None])
+    s = jnp.where(mask[:, None, None, :], s, NEG)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    o = jnp.einsum("qkgs,skd->qkgd", p, vf)
+    # rows with no valid kv -> zero output
+    any_valid = jnp.any(mask, axis=-1)
+    o = jnp.where(any_valid[:, None, None, None], o, 0.0)
+    return o.reshape(Tq, H, Dh).astype(q.dtype)
+
+
+def mha_ref(q, k, v, *, causal=True, window=0):
+    """Plain (optionally sliding-window) causal attention.
+    q: (B, S, H, D); k, v: (B, S, Kh, D)."""
+    B, S, H, Dh = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qf = q.astype(jnp.float32).reshape(B, S, Kh, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) \
+        / np.sqrt(Dh)
+    i = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window:
+        mask &= i[None, :] > (i[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def decode_ref(q, k, v, lengths):
+    """GQA decode: one query token per row against a long KV cache.
+    q: (B, H, D); k, v: (B, S, Kh, D); lengths: (B,) valid KV prefix."""
+    B, H, Dh = q.shape
+    S, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qf = q.astype(jnp.float32).reshape(B, Kh, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32)) \
+        / np.sqrt(Dh)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Dh).astype(q.dtype)

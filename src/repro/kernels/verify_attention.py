@@ -1,0 +1,168 @@
+"""SPIN packed verification attention — the paper's §V-A compute kernel,
+TPU-native.
+
+All requests' KV fragments live in ONE flattened packed buffer (Tkv tokens,
+any interleaving) tagged with (segment, position); the query buffer (Tq =
+sum over requests of gamma+1 verification tokens) is tagged the same way.
+The kernel computes flash attention where token j contributes to query i iff
+
+    seg_j == seg_i  (Eq. 13 indicator I_{j,S})  and  pos_j <= pos_i (causal)
+
+so the softmax denominator spans exactly the packed fragments of the query's
+request — no padding tokens enter the computation, and whole KV blocks whose
+segment range cannot intersect the query block's are SKIPPED (the dominant
+saving: compute tracks the packed size, not the padded size).
+
+TPU mapping:
+  grid = (Tq/BQ, Tkv/BK); KV is the sequential (arbitrary) axis.
+  Blocks: q (BQ, H, D) and kv (BK, Kh, D) tiles in VMEM; seg/pos vectors in
+  SMEM.  BQ=BK=128 and D a multiple of 128 keeps the MXU fed and the
+  working set (q + k + v + acc tiles, f32) around
+  128*(H+2*Kh+H)*D*4 bytes << 16 MiB VMEM for every assigned arch.
+  Running (m, l, acc) live in VMEM scratch across the KV axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_seg_ref, q_pos_ref, kv_seg_ref, kv_pos_ref,   # scalar-ish
+            q_ref, k_ref, v_ref,                            # VMEM tiles
+            o_ref,                                          # output tile
+            m_ref, l_ref, acc_ref,                          # VMEM scratch
+            *, nk: int, scale: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_seg = q_seg_ref[...]                  # (BQ,)
+    q_pos = q_pos_ref[...]
+    kv_seg = kv_seg_ref[...]                # (BK,)
+    kv_pos = kv_pos_ref[...]
+
+    # Block-level skip: segment ranges disjoint OR the whole KV block is in
+    # the future of every query OR all slots empty.  Padding slots carry
+    # seg = -1 and never match (q_seg >= 0 for real queries).
+    kv_valid = kv_seg >= 0
+    kv_seg_lo = jnp.min(jnp.where(kv_valid, kv_seg, jnp.iinfo(jnp.int32).max))
+    kv_seg_hi = jnp.max(kv_seg)             # -1 if all padding
+    q_lo, q_hi = jnp.min(q_seg), jnp.max(q_seg)
+    overlap = (kv_seg_hi >= q_lo) & (kv_seg_lo <= q_hi)
+    not_future = jnp.min(jnp.where(kv_valid, kv_pos,
+                                   jnp.iinfo(jnp.int32).max)) <= jnp.max(q_pos)
+
+    @pl.when(overlap & not_future)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * scale      # (BQ, H, D)
+        k = k_ref[...].astype(jnp.float32)              # (BK, Kh, D)
+        v = v_ref[...].astype(jnp.float32)
+        BQ, H, D = q.shape
+        BK, Kh, _ = k.shape
+        G = H // Kh
+        qg = q.reshape(BQ, Kh, G, D)
+        s = jax.lax.dot_general(
+            qg.transpose(1, 2, 0, 3).reshape(Kh, G * BQ, D),
+            k.transpose(1, 2, 0),
+            (((2,), (1,)), ((0,), (0,))))               # (Kh, G*BQ, BK)
+        s = s.reshape(Kh, G, BQ, BK).transpose(2, 0, 1, 3)  # (BQ,Kh,G,BK)
+        mask = (q_seg[:, None] == kv_seg[None, :]) \
+            & (kv_seg[None, :] >= 0) \
+            & (kv_pos[None, :] <= q_pos[:, None])       # (BQ, BK)
+        s = jnp.where(mask[:, None, None, :], s, NEG)
+
+        m_prev = m_ref[...].reshape(BQ, Kh, G)
+        l_prev = l_ref[...].reshape(BQ, Kh, G)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard: rows with everything masked keep m finite
+        m_safe = jnp.maximum(m_new, -1e29)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.transpose(1, 2, 0, 3).reshape(Kh, G * BQ, BK),
+            v.transpose(1, 0, 2),
+            (((2,), (1,)), ((0,), (0,))))               # (Kh, G*BQ, D)
+        pv = pv.reshape(Kh, G, BQ, D).transpose(2, 0, 1, 3)
+        acc_prev = acc_ref[...].reshape(BQ, Kh, G, D)
+        acc_new = acc_prev * corr[..., None] + pv
+        m_ref[...] = m_new.reshape(BQ, Kh * G)
+        l_ref[...] = l_new.reshape(BQ, Kh * G)
+        acc_ref[...] = acc_new.reshape(BQ, Kh * G, D)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+        o = jnp.where((l > 0)[..., None], o, 0.0)
+        o_ref[...] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def verify_attention(q, k, v, q_seg, q_pos, kv_seg, kv_pos, *,
+                     bq: int = 128, bk: int = 128,
+                     interpret: bool = False):
+    """q: (Tq, H, D); k,v: (Tkv, Kh, D); segs/pos int32.  Returns (Tq,H,D).
+
+    Inputs are padded to block multiples here (padding queries get seg=-1
+    and produce zeros)."""
+    Tq, H, D = q.shape
+    Tkv, Kh, _ = k.shape
+    scale = 1.0 / np.sqrt(D)
+
+    Tq_p = int(np.ceil(Tq / bq) * bq)
+    Tkv_p = int(np.ceil(Tkv / bk) * bk)
+    qp = jnp.pad(q, ((0, Tq_p - Tq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, Tkv_p - Tkv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, Tkv_p - Tkv), (0, 0), (0, 0)))
+    pad_i32 = lambda x, n: jnp.pad(x.astype(jnp.int32), (0, n),
+                                   constant_values=-1)
+    q_seg_p = pad_i32(q_seg, Tq_p - Tq)
+    q_pos_p = pad_i32(q_pos, Tq_p - Tq)
+    kv_seg_p = pad_i32(kv_seg, Tkv_p - Tkv)
+    kv_pos_p = pad_i32(kv_pos, Tkv_p - Tkv)
+
+    nq, nk = Tq_p // bq, Tkv_p // bk
+    grid = (nq, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bq, H, D), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bk, Kh, D), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bk, Kh, D), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, H, D), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tq_p, H, D), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, H), jnp.float32),      # running max m
+            _vmem((bq, H), jnp.float32),      # running sum l
+            _vmem((bq, H, D), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q_seg_p, q_pos_p, kv_seg_p, kv_pos_p, qp, kp, vp)
+    return out[:Tq]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (tests see one CPU device; only launch/dryrun.py
+sets the 512-placeholder-device XLA flag before first jax init).
+
+Topology: TPU v5e pods of 16x16 = 256 chips.  Single pod: (data=16,
+model=16) — ICI on both axes.  Multi-pod: leading `pod` axis (size 2 here;
+scales to N pods) mapped over DCN, used for data parallelism with optional
+gradient compression (distributed/collectives.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,93 @@
+"""SPIN serving launcher.
+
+    python -m repro.launch.serve --dataset mix --requests 16 \
+        --selector lbss --gamma 4 [--no-packed] [--no-pipeline]
+
+Builds the heterogeneous SSM zoo + LLM (reduced configs on CPU; the same
+code paths drive full configs on a pod, where ``--mesh`` places the LLM on
+the `model` axis via pjit and each SSM replica on a dedicated data slice —
+see DESIGN.md §6), then runs the SpinEngine until all requests finish.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import registry, spin_llama
+from repro.core import spec_decode as sd
+from repro.core.selector import (LBSS, EpsilonGreedy, GreedyPromptLength,
+                                 SelectorConfig)
+from repro.data.workloads import make_workload
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.serving.engine import EngineConfig, SpinEngine
+
+
+def build_zoo(vocab: int, seed: int = 0, n_ssms: int = 3):
+    """Reduced-scale LLM + heterogeneous SSM zoo (shape-faithful families
+    of the paper's LLaMA 68M..1.4B lineup)."""
+    key = jax.random.PRNGKey(seed)
+    cfg_llm = reduced(spin_llama.LLAMA_7B, d_model=96, n_heads=4,
+                      n_kv_heads=4, vocab_size=vocab, n_layers=4)
+    llm = sd.Bundle(cfg_llm, T.init_params(cfg_llm, key))
+    dims = [(32, 1), (48, 2), (64, 2), (96, 3), (96, 4)][:n_ssms]
+    ssms = []
+    for i, (d, L) in enumerate(dims):
+        c = reduced(spin_llama.SSM_ZOO[min(i, 4)], d_model=d, n_heads=4,
+                    n_kv_heads=4, vocab_size=vocab, n_layers=L)
+        ssms.append(sd.Bundle(c, T.init_params(c, jax.random.PRNGKey(i + 1))))
+    return llm, ssms
+
+
+def make_selector(kind: str, n_ssms: int, cap: int, prompt_lens=None,
+                  seed: int = 0, group_of=None):
+    scfg = SelectorConfig(n_ssms=n_ssms, batch_limits=[cap] * n_ssms,
+                          alpha=6, beta=2, seed=seed)
+    if kind == "lbss":
+        return LBSS(scfg, group_of=group_of)
+    if kind == "eps":
+        return EpsilonGreedy(scfg, eps=0.2)
+    if kind == "greedy":
+        return GreedyPromptLength(scfg, prompt_lens or {})
+    raise ValueError(kind)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="mix",
+                    choices=["alpaca", "cp", "cip", "mix"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--selector", default="lbss",
+                    choices=["lbss", "eps", "greedy"])
+    ap.add_argument("--n-ssms", type=int, default=3)
+    ap.add_argument("--gamma", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--no-packed", action="store_true")
+    ap.add_argument("--no-pipeline", action="store_true")
+    ap.add_argument("--max-slots", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", type=float, default=0.3)
+    args = ap.parse_args(argv)
+
+    llm, ssms = build_zoo(args.vocab, args.seed, args.n_ssms)
+    reqs = make_workload(args.dataset, args.requests, args.vocab,
+                         seed=args.seed, scale=args.scale)
+    sel = make_selector(args.selector, len(ssms), args.requests,
+                        {r.rid: r.prompt_len for r in reqs}, args.seed,
+                        group_of={r.rid: r.dataset for r in reqs})
+    ecfg = EngineConfig(gamma=args.gamma, max_len=256,
+                        capacity=args.requests,
+                        use_packed_verify=not args.no_packed,
+                        use_pipeline=not args.no_pipeline)
+    eng = SpinEngine(llm, ssms, sel, ecfg)
+    eng.add_requests(reqs)
+    stats = eng.run(max_slots=args.max_slots)
+    print(json.dumps(stats, indent=2, default=str))
+    return stats
+
+
+if __name__ == "__main__":
+    main()

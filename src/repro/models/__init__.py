@@ -1,0 +1,6 @@
+"""Model substrate: dense / MoE / SSM / hybrid decoder LMs in pure JAX."""
+
+from repro.models.config import ModelConfig
+from repro.models import transformer
+
+__all__ = ["ModelConfig", "transformer"]

@@ -1,0 +1,154 @@
+"""Core layers: RMSNorm, RoPE, chunked-causal attention, SwiGLU MLP.
+
+The attention here is the XLA-path reference used by training / prefill /
+decode / SPIN packed verification.  It is flash-style *chunked over query
+blocks* so no (S x S) score tensor is ever materialized — required for the
+32k-prefill and 500k-decode dry-run shapes.  The Pallas kernels in
+``repro.kernels`` implement the same math for the TPU hot path and are
+validated against ``repro.kernels.ref`` which mirrors this module.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+            ).astype(dt)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embeddings. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    assert d % 2 == 0, f"RoPE needs even head_dim, got {d}"
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # positions: (B, S) -> ang: (B, S, 1, half)
+    ang = positions[:, :, None, None].astype(jnp.float32) * freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_block(q, k, v, q_pos, kv_pos, q_seg, kv_seg, window, scale):
+    """Attention for one query block against full K/V.
+
+    q: (B, Qb, Kh, G, D)   k,v: (B, Skv, Kh, D)
+    q_pos: (B, Qb)  kv_pos: (B, Skv)  segs same shapes (or None)
+    """
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]                # causal
+    if window:
+        mask &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if q_seg is not None:
+        mask &= q_seg[:, :, None] == kv_seg[:, None, :]
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # rows with no valid key (padding query) -> all NEG_INF; keep finite
+    m = jnp.maximum(m, -1e29)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.astype(v.dtype)
+
+
+def attention(q, k, v, *, q_positions, kv_positions,
+              q_segments=None, kv_segments=None,
+              window: int = 0, q_block: int = 512):
+    """GQA chunked-causal attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Kh, D).  Hq % Kh == 0.
+    positions are absolute token indices (causality = kv_pos <= q_pos).
+    segments (optional) restrict attention to equal segment ids — this is the
+    TPU-native form of SPIN Eq. (13): the softmax denominator sums over all
+    packed tokens of the same original request and nothing else.
+    """
+    B, Sq, Hq, D = q.shape
+    Kh = k.shape[2]
+    G = Hq // Kh
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qg = q.reshape(B, Sq, Kh, G, D)
+
+    if Sq <= q_block:
+        o = _attn_block(qg, k, v, q_positions, kv_positions,
+                        q_segments, kv_segments, window, scale)
+        return o.reshape(B, Sq, Hq, D)
+
+    if Sq % q_block:
+        # pad queries to a block multiple (e.g. vlm prefix makes S=33024);
+        # padded rows carry position -1 -> fully masked -> sliced away.
+        pad = q_block - Sq % q_block
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)),
+                              constant_values=-1)
+        if q_segments is not None:
+            q_segments = jnp.pad(q_segments, ((0, 0), (0, pad)),
+                                 constant_values=-1)
+        out = attention(qg.reshape(B, Sq + pad, Hq, D), k, v,
+                        q_positions=q_positions, kv_positions=kv_positions,
+                        q_segments=q_segments, kv_segments=kv_segments,
+                        window=window, q_block=q_block)
+        return out[:, :Sq]
+
+    nq = Sq // q_block
+    qs_blocks = qg.reshape(B, nq, q_block, Kh, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp_blocks = q_positions.reshape(B, nq, q_block).transpose(1, 0, 2)
+    if q_segments is None:
+        seg_blocks = jnp.zeros((nq, B, q_block), jnp.int32)
+        kv_segments_ = jnp.zeros_like(kv_positions)
+    else:
+        seg_blocks = q_segments.reshape(B, nq, q_block).transpose(1, 0, 2)
+        kv_segments_ = kv_segments
+
+    def body2(carry, xs):
+        qb, qp, qs = xs
+        o = _attn_block(qb, k, v, qp, kv_positions, qs, kv_segments_,
+                        window, scale)
+        return carry, o
+
+    _, outs = lax.scan(body2, None, (qs_blocks, qp_blocks, seg_blocks))
+    o = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, D)
+    return o
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table):
+    return x @ table.T if table.shape[0] != x.shape[-1] else x @ table
+
+
+def softmax_cross_entropy(logits, labels, mask=None, vocab_size: int = 0):
+    """Mean CE over valid positions; logits may be vocab-padded."""
+    logits = logits.astype(jnp.float32)
+    if vocab_size and logits.shape[-1] > vocab_size:
+        pad = logits.shape[-1] - vocab_size
+        neg = jnp.full((pad,), NEG_INF, jnp.float32)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((vocab_size,), jnp.float32), neg])
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

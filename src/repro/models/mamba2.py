@@ -1,0 +1,156 @@
+"""Mamba2 (SSD) block in pure JAX — chunked-parallel train/prefill, O(1) decode.
+
+State-space recurrence per head h with scalar decay:
+    a_t = exp(A_h * dt_t),   S_t = a_t * S_{t-1} + dt_t * B_t x_t^T,
+    y_t = C_t . S_t + D_h * x_t
+Train/prefill uses the chunked (SSD) form: within-chunk quadratic term with
+log-space decay ratios + cross-chunk state carry; mathematically identical to
+the sequential recurrence (tested in tests/test_models.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm
+from repro.models.params import P
+
+
+class Mamba2State(NamedTuple):
+    ssd: jax.Array    # (B, nh, hd, ds) f32
+    conv: jax.Array   # (B, k-1, conv_dim) rolling raw inputs
+
+
+def param_spec(cfg):
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ds
+    return {
+        "ln": P((d,), ("embed",), init="zeros"),
+        "in_proj": P((d, 2 * di + 2 * ds + nh), ("embed", "ssm_in")),
+        "conv_w": P((cfg.conv_kernel, conv_dim), (None, "ssm_conv")),
+        "conv_b": P((conv_dim,), ("ssm_conv",), init="zeros"),
+        "A_log": P((nh,), ("ssm_heads",), init="zeros"),
+        "dt_bias": P((nh,), ("ssm_heads",), init="zeros"),
+        "D": P((nh,), ("ssm_heads",), init="zeros"),
+        "norm_w": P((di,), ("ssm_inner",), init="zeros"),
+        "out_proj": P((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split(cfg, proj):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * ds]
+    dt = proj[..., di + di + 2 * ds:]
+    return z, xbc, dt
+
+
+def _conv(cfg, xbc, conv_w, conv_b, prev):
+    """Depthwise causal conv, kernel k.  prev: (B, k-1, C) history or None."""
+    k = cfg.conv_kernel
+    if prev is None:
+        pad = jnp.zeros(xbc.shape[:-2] + (k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = prev.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=-2)          # (B, S+k-1, C)
+    out = sum(xp[..., i:i + xbc.shape[-2], :] * conv_w[i] for i in range(k))
+    out = jax.nn.silu(out + conv_b)
+    new_prev = xp[..., xp.shape[-2] - (k - 1):, :]
+    return out, new_prev
+
+
+def _ssd_chunk(xh, Bk, Ck, dt, a_log, state):
+    """One chunk of SSD. xh: (B,Q,nh,hd)  Bk/Ck: (B,Q,ds)  dt,a_log: (B,Q,nh)
+    state: (B,nh,hd,ds) f32.  Returns (y, new_state)."""
+    B, Q, nh, hd = xh.shape
+    la = jnp.cumsum(a_log, axis=1)                     # (B,Q,nh) log cumdecay
+    # intra-chunk: y[i] += sum_{j<=i} (C_i.B_j) exp(la_i - la_j) dt_j x_j
+    G = jnp.einsum("bis,bjs->bij", Ck, Bk)             # (B,Q,Q)
+    ratio = la[:, :, None, :] - la[:, None, :, :]      # (B,i,j,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    W = jnp.where(mask[None, :, :, None], jnp.exp(ratio), 0.0)
+    W = W * G[..., None] * dt[:, None, :, :]           # (B,i,j,nh)
+    y = jnp.einsum("bijh,bjhd->bihd", W, xh)
+    # inter-chunk: y[i] += C_i . state * exp(la_i)
+    y = y + jnp.einsum("bis,bhds,bih->bihd", Ck, state, jnp.exp(la))
+    # state update: S' = exp(la_end) S + sum_j exp(la_end - la_j) dt_j B_j x_j^T
+    wj = jnp.exp(la[:, -1:, :] - la) * dt              # (B,Q,nh)
+    new_state = state * jnp.exp(la[:, -1])[:, :, None, None] \
+        + jnp.einsum("bjh,bjhd,bjs->bhds", wj, xh, Bk)
+    return y, new_state
+
+
+def forward(params, x, cfg, *, state=None, chunk: int = 128,
+            unroll_inner: bool = False):
+    """x: (B, S, d). Returns (out, Mamba2State)."""
+    Bsz, S, d = x.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dt_ = x.dtype
+
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split(cfg, proj)
+    prev_conv = state.conv if state is not None else None
+    xbc, new_conv = _conv(cfg, xbc, params["conv_w"], params["conv_b"],
+                          prev_conv)
+    xc = xbc[..., :cfg.d_inner]
+    Bk = xbc[..., cfg.d_inner:cfg.d_inner + ds].astype(jnp.float32)
+    Ck = xbc[..., cfg.d_inner + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                 # (nh,)
+    a_log = A * dt                                                    # (B,S,nh)
+    xh = xc.reshape(Bsz, S, nh, hd).astype(jnp.float32)
+
+    s0 = state.ssd if state is not None else \
+        jnp.zeros((Bsz, nh, hd, ds), jnp.float32)
+
+    if S <= chunk:
+        y, s_new = _ssd_chunk(xh, Bk, Ck, dt, a_log, s0)
+    else:
+        assert S % chunk == 0, (S, chunk)
+        nc = S // chunk
+
+        def body(s, xs):
+            xh_c, B_c, C_c, dt_c, al_c = xs
+            y_c, s = _ssd_chunk(xh_c, B_c, C_c, dt_c, al_c, s)
+            return s, y_c
+
+        def cs(t):  # (B,S,...) -> (nc, B, chunk, ...)
+            return t.reshape((Bsz, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+        s_new, ys = lax.scan(body, s0, (cs(xh), cs(Bk), cs(Ck), cs(dt),
+                                        cs(a_log)),
+                             unroll=nc if unroll_inner else 1)
+        y = ys.swapaxes(0, 1).reshape(Bsz, S, nh, hd)
+
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, Mamba2State(ssd=s_new, conv=new_conv)
+
+
+def decode_step(params, x, cfg, state):
+    """x: (B, 1, d) single token. O(1) sequential recurrence."""
+    return forward(params, x, cfg, state=state, chunk=1)
+
+
+def init_state(cfg, batch, dtype=jnp.float32):
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * ds
+    return Mamba2State(
+        ssd=jnp.zeros((batch, nh, hd, ds), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype))
+
+
+def abstract_state(cfg, batch, dtype=jnp.float32):
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * ds
+    return Mamba2State(
+        ssd=jax.ShapeDtypeStruct((batch, nh, hd, ds), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cfg.conv_kernel - 1, conv_dim),
+                                  dtype))

@@ -1,0 +1,200 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, strictly sequential recurrence).
+
+mLSTM is computed with the same chunked log-space-decay machinery as Mamba2's
+SSD: per-head scalar forget gate f_t acts as decay, exp input gate i_t as the
+input scale, with both a value readout (numerator) and a key-sum readout
+(denominator n).  This is the exact unstabilized mLSTM recurrence evaluated
+stably in f32 with clamped input-gate logits (see DESIGN.md §8).
+
+sLSTM keeps the h_{t-1} -> gates recurrence (not parallelizable); train uses
+``lax.scan`` over time.  Its roofline contribution is corrected analytically
+by the roofline driver (scan bodies are counted once by HLO cost analysis).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm
+from repro.models.params import P
+
+PF_M = 2          # mLSTM up-projection factor
+PF_S = 4.0 / 3.0  # sLSTM FFN factor
+CLAMP = 8.0       # input-gate logit clamp
+
+
+class MLstmState(NamedTuple):
+    C: jax.Array   # (B, nh, dk, dv) f32
+    n: jax.Array   # (B, nh, dk) f32
+
+
+class SLstmState(NamedTuple):
+    c: jax.Array   # (B, nh, hd) f32
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+# ----------------------------------------------------------------- mLSTM --
+
+def mlstm_spec(cfg):
+    d = cfg.d_model
+    di = PF_M * d
+    return {
+        "ln": P((d,), ("embed",), init="zeros"),
+        "up_proj": P((d, 2 * di), ("embed", "xl_up")),
+        "wq": P((di, di), ("xl_inner", "xl_inner2")),
+        "wk": P((di, di), ("xl_inner", "xl_inner2")),
+        "wv": P((di, di), ("xl_inner", "xl_inner2")),
+        "w_gates": P((d, 2 * cfg.n_heads), ("embed", None)),
+        "b_gates": P((2 * cfg.n_heads,), (None,), init="zeros"),
+        "norm_w": P((di,), ("xl_inner",), init="zeros"),
+        "down_proj": P((di, d), ("xl_inner", "embed")),
+    }
+
+
+def _mlstm_chunk(q, k, v, ig, la, state):
+    """q,k,v: (B,Q,nh,dk/dv) f32; ig (input gate): (B,Q,nh); la: (B,Q,nh)
+    log forget decay.  state: MLstmState.  Returns (h, new_state)."""
+    B, Q, nh, dk = q.shape
+    lac = jnp.cumsum(la, axis=1)
+    G = jnp.einsum("bihd,bjhd->bijh", q, k)                 # (B,Q,Q,nh)
+    ratio = lac[:, :, None, :] - lac[:, None, :, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    W = jnp.where(mask[None, :, :, None], jnp.exp(ratio), 0.0)
+    W = W * G * ig[:, None, :, :]
+    num = jnp.einsum("bijh,bjhe->bihe", W, v)
+    den = jnp.sum(W, axis=2)                                # (B,Q,nh)
+    decay_i = jnp.exp(lac)
+    num = num + jnp.einsum("bihd,bhde->bihe", q, state.C) * decay_i[..., None]
+    den = den + jnp.einsum("bihd,bhd->bih", q, state.n) * decay_i
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    wj = jnp.exp(lac[:, -1:, :] - lac) * ig
+    C_new = state.C * jnp.exp(lac[:, -1])[..., None, None] \
+        + jnp.einsum("bjh,bjhd,bjhe->bhde", wj, k, v)
+    n_new = state.n * jnp.exp(lac[:, -1])[..., None] \
+        + jnp.einsum("bjh,bjhd->bhd", wj, k)
+    return h, MLstmState(C=C_new, n=n_new)
+
+
+def mlstm_forward(params, x, cfg, *, state=None, chunk: int = 128,
+                  unroll_inner: bool = False):
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    di = PF_M * d
+    dk = di // nh
+    dt_ = x.dtype
+
+    up = x @ params["up_proj"]
+    xi, z = up[..., :di], up[..., di:]
+    q = (xi @ params["wq"]).reshape(B, S, nh, dk).astype(jnp.float32)
+    k = (xi @ params["wk"]).reshape(B, S, nh, dk).astype(jnp.float32)
+    v = (xi @ params["wv"]).reshape(B, S, nh, dk).astype(jnp.float32)
+    q = q / jnp.sqrt(float(dk))
+    gates = (x @ params["w_gates"] + params["b_gates"]).astype(jnp.float32)
+    ig = jnp.exp(jnp.clip(gates[..., :nh], -CLAMP, CLAMP))   # (B,S,nh)
+    la = jax.nn.log_sigmoid(gates[..., nh:])                 # log forget decay
+
+    s0 = state if state is not None else MLstmState(
+        C=jnp.zeros((B, nh, dk, dk), jnp.float32),
+        n=jnp.zeros((B, nh, dk), jnp.float32))
+
+    if S <= chunk:
+        h, s_new = _mlstm_chunk(q, k, v, ig, la, s0)
+    else:
+        assert S % chunk == 0
+        nc = S // chunk
+
+        def cs(t):
+            return t.reshape((B, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+        def body2(s, xs):
+            qc, kc, vc, igc, lac = xs
+            h_c, s2 = _mlstm_chunk(qc, kc, vc, igc, lac, s)
+            return s2, h_c
+
+        s_new, hs = lax.scan(body2, s0, (cs(q), cs(k), cs(v), cs(ig), cs(la)),
+                             unroll=nc if unroll_inner else 1)
+        h = hs.swapaxes(0, 1).reshape(B, S, nh, dk)
+
+    h = h.reshape(B, S, di).astype(dt_)
+    h = rms_norm(h, params["norm_w"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return h @ params["down_proj"], s_new
+
+
+def mlstm_init_state(cfg, batch):
+    nh = cfg.n_heads
+    dk = PF_M * cfg.d_model // nh
+    return MLstmState(C=jnp.zeros((batch, nh, dk, dk), jnp.float32),
+                      n=jnp.zeros((batch, nh, dk), jnp.float32))
+
+
+# ----------------------------------------------------------------- sLSTM --
+
+def slstm_spec(cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ff = int(PF_S * d)
+    return {
+        "ln": P((d,), ("embed",), init="zeros"),
+        "w_in": P((d, 4 * d), ("embed", None)),          # i,f,z,o projections
+        "r": P((4, nh, hd, hd), (None, "heads", None, None)),
+        "b": P((4 * d,), (None,), init="zeros"),
+        "norm_w": P((d,), ("embed",), init="zeros"),
+        "ff_up": P((d, 2 * ff), ("embed", "mlp")),
+        "ff_down": P((ff, d), ("mlp", "embed")),
+    }
+
+
+def slstm_forward(params, x, cfg, *, state=None):
+    """Sequential sLSTM. x: (B, S, d)."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    dt_ = x.dtype
+
+    xproj = (x @ params["w_in"] + params["b"]).astype(jnp.float32)
+    xproj = xproj.reshape(B, S, 4, nh, hd)
+    r = params["r"].astype(jnp.float32)
+
+    s0 = state if state is not None else SLstmState(
+        c=jnp.zeros((B, nh, hd), jnp.float32),
+        n=jnp.zeros((B, nh, hd), jnp.float32),
+        h=jnp.zeros((B, nh, hd), jnp.float32),
+        m=jnp.zeros((B, nh, hd), jnp.float32))
+
+    def step(s, xp):
+        # xp: (B, 4, nh, hd); recurrent contribution from h_{t-1}
+        rec = jnp.einsum("bhd,ghde->bghe", s.h, r)      # (B,4,nh,hd)
+        g = xp + rec
+        it, ft, zt, ot = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        m_new = jnp.maximum(ft + s.m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + s.m - m_new)
+        c_new = f_p * s.c + i_p * jnp.tanh(zt)
+        n_new = f_p * s.n + i_p
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+        return SLstmState(c_new, n_new, h_new, m_new), h_new
+
+    xs = xproj.swapaxes(0, 1)                           # (S, B, 4, nh, hd)
+    s_new, hs = lax.scan(step, s0, xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(dt_)
+    h = rms_norm(h, params["norm_w"], cfg.norm_eps)
+    up = h @ params["ff_up"]
+    ff = up.shape[-1] // 2
+    h = jax.nn.gelu(up[..., :ff]) * up[..., ff:]
+    return h @ params["ff_down"], s_new
+
+
+def slstm_init_state(cfg, batch):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return SLstmState(c=z, n=z, h=z, m=z)

@@ -1,0 +1,98 @@
+"""AdamW + LR schedules, pure JAX (no optax in this environment).
+
+Moments are stored in f32 regardless of param dtype (mixed-precision master
+statistics); weight decay is decoupled.  Global-norm clipping is fused into
+the update.  The optimizer state shards exactly like the parameters (the
+sharding rule table maps the same logical axes), giving ZeRO-style
+partitioned optimizer state under the `data` mesh axis for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def linear_warmup(peak_lr: float, warmup: int) -> Callable:
+    def fn(step):
+        return peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+    return fn
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def fn(step):
+        warm = (step + 1) / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * jnp.minimum(warm, cos)
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(f32, params),
+                          nu=jax.tree.map(f32, params))
+
+    def abstract_state(self, abstract_params) -> AdamWState:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          mu=jax.tree.map(f32, abstract_params),
+                          nu=jax.tree.map(f32, abstract_params))
+
+    def update(self, params, grads, state: AdamWState):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        if self.clip_norm:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        else:
+            scale = 1.0
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2 and self.weight_decay:   # no decay on norms/biases
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

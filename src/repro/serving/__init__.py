@@ -1,0 +1,3 @@
+from repro.serving.engine import EngineConfig, SpinEngine
+
+__all__ = ["EngineConfig", "SpinEngine"]

@@ -1,0 +1,421 @@
+"""SPIN's runtime engine (paper §III Fig. 7 + §V).
+
+Per time slot:
+  1. the selector assigns each active request to an SSM (LBSS / baselines);
+     switches go through the SwitchManager (fast pre-computed switching);
+  2. every SSM drafts gamma candidates for its batch (static-shape pools);
+  3. the LLM verifies all candidates — padded (vanilla) or packed via
+     request decomposition (§V-A);
+  4. accepted tokens are committed, caches rolled back, goodput observed
+     back into the selector.
+
+Timing: functional results are exact; the slot TIMELINE (draft/verify
+overlap with micro-batch pipelining, §V-B) is computed by the calibrated
+event simulator in core/pipeline.py, because this host has one CPU — on a
+TPU pod the same schedule is realized by dispatching drafts and
+verifications to disjoint device groups (launch/serve.py maps SSM replicas
+and the LLM onto sub-meshes; JAX async dispatch overlaps them).  Wall-clock
+is also recorded for reference.
+
+Fault tolerance: ``fail_ssm`` drops a replica (requests re-routed through
+the switching path); straggler mitigation re-dispatches micro-batches whose
+simulated draft time exceeds ``straggler_factor`` x the expected time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decompose as D
+from repro.core import pipeline as P
+from repro.core import spec_decode as sd
+from repro.core.selector import LBSS, SelectorConfig
+from repro.core.switching import SwitchManager
+from repro.data.workloads import Request
+from repro.models import transformer as T
+from repro.serving.pool import CachePool, _rows_invalidate
+
+
+def _bucket(n: int, align: int = 16) -> int:
+    return max(align, int(math.ceil(n / align) * align))
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    gamma: int = 4
+    max_len: int = 256
+    capacity: int = 16                 # concurrent requests (LLM pool rows)
+    use_packed_verify: bool = True
+    use_pipeline: bool = True
+    micro_batches: Optional[List[int]] = None   # None -> paper heuristic
+    packed_bucket: int = 256           # packed-KV shape bucketing (retraces)
+    straggler_factor: float = 4.0
+    straggler_mitigation: bool = True
+    seed: int = 0
+
+
+class SpinEngine:
+    def __init__(self, llm: sd.Bundle, ssms: Sequence[sd.Bundle],
+                 selector, ecfg: EngineConfig,
+                 cost_model: Optional[P.CostModel] = None):
+        self.llm = llm
+        self.ssms = list(ssms)
+        self.selector = selector
+        self.ecfg = ecfg
+        self.llm_pool = CachePool(llm.cfg, ecfg.capacity, ecfg.max_len)
+        self.ssm_pools = [
+            CachePool(b.cfg, selector.cfg.batch_limits[j], ecfg.max_len)
+            for j, b in enumerate(self.ssms)]
+        self.switcher = SwitchManager(self.ssms)
+        self.cost = cost_model or P.CostModel(
+            ssm_time_per_token=[1e-4 * (j + 1) for j in range(len(ssms))],
+            ssm_fixed=[2e-4] * len(ssms),
+            llm_fixed=1e-3, llm_time_per_token=5e-4, gamma=ecfg.gamma)
+        self.failed_ssms: set = set()
+        self.requests: Dict[int, Request] = {}
+        self.assignment: Dict[int, int] = {}
+        self.waiting: List[Request] = []
+        self.rng = jax.random.PRNGKey(ecfg.seed)
+        # metrics
+        self.sim_time = 0.0
+        self.wall_time = 0.0
+        self.accepted_tokens = 0
+        self.total_drafted = 0
+        self.slot_log: List[dict] = []
+        self.straggler_redispatches = 0
+        self._accept_by_req: Dict[int, List[float]] = {}
+
+    # ------------------------------------------------------------ admin --
+    def add_requests(self, reqs: Sequence[Request]):
+        self.waiting.extend(reqs)
+        self._admit()
+
+    def _admit(self):
+        while self.waiting and self.llm_pool.free_rows > 0:
+            r = self.waiting.pop(0)
+            self.requests[r.rid] = r
+            prompt = np.asarray(r.prompt)
+            Pb = _bucket(len(prompt))
+            toks = np.zeros((1, Pb), np.int32)
+            toks[0, :len(prompt)] = prompt
+            lengths = jnp.asarray([len(prompt)], jnp.int32)
+            logits, cache = self.llm.prefill(jnp.asarray(toks), lengths,
+                                             self.ecfg.max_len)
+            last = int(jnp.argmax(
+                logits[0, len(prompt) - 1, :self.llm.cfg.vocab_size]))
+            r.emitted = [last]
+            self.llm_pool.insert(r.rid, cache, len(prompt), last)
+
+    def fail_ssm(self, j: int):
+        """Replica failure: drain its requests, zero its capacity."""
+        self.failed_ssms.add(j)
+        self.selector.cfg.batch_limits[j] = 0
+        for rid in list(self.ssm_pools[j].row_of):
+            self.ssm_pools[j].evict(rid)
+            self.assignment.pop(rid, None)
+
+    # --------------------------------------------------------- one slot --
+    def step(self) -> dict:
+        t_wall = time.perf_counter()
+        active = [r for r in self.requests.values() if not r.done]
+        if not active:
+            return {"done": True}
+        ids = [r.rid for r in active]
+        assign = self.selector.assign(ids)
+
+        # apply switches / placements
+        for rid, j in assign.items():
+            if j in self.failed_ssms:
+                j = min(set(range(len(self.ssms))) - self.failed_ssms)
+                assign[rid] = j
+            prev = self.assignment.get(rid)
+            if prev == j and self.ssm_pools[j].has(rid):
+                continue
+            if prev is not None and prev != j and \
+                    self.ssm_pools[prev].has(rid):
+                self.ssm_pools[prev].evict(rid)
+            if not self.ssm_pools[j].has(rid):
+                self._place_on_ssm(rid, j)
+            self.assignment[rid] = j
+
+        # draft on every SSM pool (static shapes)
+        drafts: Dict[int, np.ndarray] = {}
+        draft_times = []
+        per_ssm_batch = []
+        for j, (b, pool) in enumerate(zip(self.ssms, self.ssm_pools)):
+            rids = [r for r in ids if assign.get(r) == j]
+            per_ssm_batch.append(len(rids))
+            if not rids or j in self.failed_ssms:
+                draft_times.append(0.0)
+                continue
+            cand = self._draft_pool(j)
+            rows = pool.rows(rids)
+            for rid, row in zip(rids, rows):
+                drafts[rid] = cand[row]
+            draft_times.append(self.cost.draft_time(j, pool.capacity))
+        self.total_drafted += sum(per_ssm_batch) * self.ecfg.gamma
+
+        # verification (functional, full batch)
+        n_acc, out, out_len = self._verify(ids, drafts)
+
+        # simulated slot timeline (pipeline §V-B); verification cost sees
+        # the padded vs decomposed-packed KV grid size (§V-A)
+        accept_rates = self._accept_rates_per_ssm(assign, ids, n_acc)
+        n_active = max(1, len(ids))
+        if self.ecfg.use_packed_verify and hasattr(self, "last_plan"):
+            kv_cells_per_req = self.last_plan.total / n_active
+        else:
+            kv_cells_per_req = float(np.max(self.llm_pool.lengths)
+                                     + self.ecfg.gamma + 1)
+        if self.ecfg.use_pipeline:
+            mb = self.ecfg.micro_batches or P.choose_micro_batches(
+                self.cost, per_ssm_batch, accept_rates)[0]
+        else:
+            mb = [1] * len(self.ssms)
+        slot = self._simulate_slot(per_ssm_batch, mb, kv_cells_per_req)
+
+        # commit tokens, update request state, observe goodput
+        slot_tokens = 0
+        for i, rid in enumerate(ids):
+            r = self.requests[rid]
+            k = int(out_len[i])
+            r.emitted.extend(int(x) for x in out[i, :k])
+            slot_tokens += k
+            g = k / max(slot.makespan, 1e-9)
+            self.selector.observe(rid, assign[rid], g)
+            self._accept_by_req.setdefault(rid, []).append(
+                float(n_acc[i]) / self.ecfg.gamma)
+            if len(r.emitted) - 1 >= r.max_new:
+                r.done = True
+                self.llm_pool.evict(rid)
+                j = self.assignment.pop(rid, None)
+                if j is not None and self.ssm_pools[j].has(rid):
+                    self.ssm_pools[j].evict(rid)
+        self.accepted_tokens += slot_tokens
+        self.sim_time += slot.makespan
+        self.wall_time += time.perf_counter() - t_wall
+
+        # fast-switching prediction for next slot (§IV-C)
+        self._precompute_switches(ids)
+        self._admit()
+
+        rec = {"tokens": slot_tokens, "sim_time": slot.makespan,
+               "llm_idle": slot.llm_idle_frac, "micro_batches": mb,
+               "active": len(ids)}
+        self.slot_log.append(rec)
+        return rec
+
+    # ---------------------------------------------------------- internals --
+    def _place_on_ssm(self, rid: int, j: int):
+        r = self.requests[rid]
+        tokens = np.concatenate([np.asarray(r.prompt),
+                                 np.asarray(r.emitted[:-1], np.int64)])
+        length = len(tokens)
+        cache, _ = self.switcher.switch(rid, j, tokens, length,
+                                        self.ecfg.max_len)
+        pool = self.ssm_pools[j]
+        if pool.free_rows == 0:
+            # evict someone not assigned here this slot
+            victim = next(rr for rr in pool.row_of
+                          if self.assignment.get(rr) != j)
+            pool.evict(victim)
+        pool.insert(rid, cache, length, r.emitted[-1])
+
+    def _precompute_switches(self, ids):
+        if not hasattr(self.selector, "predicted_destination"):
+            return
+        for rid in ids:
+            if rid not in self.requests or self.requests[rid].done:
+                continue
+            dst = self.selector.predicted_destination(rid)
+            if dst == self.assignment.get(rid) or dst in self.failed_ssms:
+                continue
+            r = self.requests[rid]
+            tokens = np.concatenate([np.asarray(r.prompt),
+                                     np.asarray(r.emitted[:-1], np.int64)])
+            self.switcher.precompute(rid, dst, tokens, len(tokens),
+                                     self.ecfg.max_len)
+
+    def _draft_pool(self, j: int) -> np.ndarray:
+        """Draft gamma tokens for every row of SSM j's pool; returns
+        (capacity, gamma) candidates.  Inactive rows are drafted too (static
+        shape) and their cache slots re-invalidated afterwards."""
+        b = self.ssms[j]
+        pool = self.ssm_pools[j]
+        lengths = jnp.asarray(pool.lengths, jnp.int32)
+        tok = jnp.asarray(pool.last_token, jnp.int32)[:, None]
+        self.rng, k = jax.random.split(self.rng)
+        cand, _, cache = sd.draft(b, pool.cache, tok, lengths,
+                                  self.ecfg.gamma, k)
+        pool.cache = cache
+        idle = [row for row in range(pool.capacity)
+                if row not in pool.row_of.values()]
+        if idle:
+            pool.cache = _rows_invalidate(pool.cache, idle)
+        return np.asarray(cand)
+
+    def _verify(self, ids, drafts):
+        """LLM verification over the full pool (padded or packed)."""
+        gamma = self.ecfg.gamma
+        N = self.llm_pool.capacity
+        cand = np.zeros((N, gamma), np.int32)
+        lengths = jnp.asarray(self.llm_pool.lengths, jnp.int32)
+        last = jnp.asarray(self.llm_pool.last_token, jnp.int32)[:, None]
+        rows = self.llm_pool.rows(ids)
+        for rid, row in zip(ids, rows):
+            cand[row] = drafts.get(rid, np.zeros(gamma, np.int32))
+        cand = jnp.asarray(cand)
+
+        if self.ecfg.use_packed_verify:
+            logits = self._verify_packed(cand, lengths, last)
+        else:
+            inp = jnp.concatenate([last, cand], axis=1)
+            logits, cache = self.llm.decode(self.llm_pool.cache, inp,
+                                            lengths)
+            self.llm_pool.cache = cache
+        V = self.llm.cfg.vocab_size
+        greedy = jnp.argmax(logits.astype(jnp.float32)[..., :V],
+                            axis=-1).astype(jnp.int32)
+        match = greedy[:, :gamma] == cand
+        n_acc_all = jnp.sum(jnp.cumprod(match.astype(jnp.int32), 1), 1)
+        idx = jnp.arange(gamma + 1)[None]
+        out_all = jnp.where(idx < n_acc_all[:, None],
+                            jnp.pad(cand, ((0, 0), (0, 1))), 0)
+        bonus = jnp.take_along_axis(greedy, n_acc_all[:, None], axis=1)
+        out_all = out_all.at[jnp.arange(N), n_acc_all].set(bonus[:, 0])
+
+        # rollback: keep accepted prefix only
+        self.llm_pool.cache = sd.invalidate_slots_jit(
+            self.llm_pool.cache, lengths + 1 + n_acc_all,
+            lengths + gamma + 1)
+        idle_rows = [row for row in range(N)
+                     if row not in self.llm_pool.row_of.values()]
+        if idle_rows:
+            self.llm_pool.cache = _rows_invalidate(self.llm_pool.cache,
+                                                   idle_rows)
+
+        # per-SSM catch-up (fill c_gamma hole) + rollback on draft pools
+        for j, pool in enumerate(self.ssm_pools):
+            if not pool.row_of:
+                continue
+            pl = jnp.asarray(pool.lengths, jnp.int32)
+            outs_j = np.zeros((pool.capacity, gamma + 1), np.int32)
+            nacc_j = np.zeros(pool.capacity, np.int64)
+            for rid, row in pool.row_of.items():
+                lrow = self.llm_pool.row_of.get(rid)
+                if lrow is None:
+                    continue
+                outs_j[row] = np.asarray(out_all[lrow])
+                nacc_j[row] = int(n_acc_all[lrow])
+            _, pool.cache = self.ssms[j].decode(
+                pool.cache, jnp.asarray(outs_j), pl + 1)
+            pool.cache = sd.invalidate_slots_jit(
+                pool.cache, pl + 2 + jnp.asarray(nacc_j, jnp.int32),
+                pl + gamma + 3)
+
+        # update lengths / last tokens on pools
+        n_acc = np.zeros(len(ids), np.int64)
+        out = np.zeros((len(ids), gamma + 1), np.int64)
+        out_len = np.zeros(len(ids), np.int64)
+        for i, (rid, row) in enumerate(zip(ids, rows)):
+            n_acc[i] = int(n_acc_all[row])
+            out[i] = np.asarray(out_all[row])
+            out_len[i] = n_acc[i] + 1
+            self.llm_pool.lengths[row] += out_len[i]
+            self.llm_pool.last_token[row] = out[i, n_acc[i]]
+            j = self.assignment[rid]
+            srow = self.ssm_pools[j].row_of[rid]
+            self.ssm_pools[j].lengths[srow] += out_len[i]
+            self.ssm_pools[j].last_token[srow] = out[i, n_acc[i]]
+        return n_acc, out, out_len
+
+    def _verify_packed(self, cand, lengths, last):
+        """Packed verification via request decomposition (§V-A)."""
+        gamma = self.ecfg.gamma
+        N = self.llm_pool.capacity
+        lens_np = np.maximum(np.asarray(lengths), 1)
+        plan = D.plan_decomposition(
+            [int(l) for l in lens_np],
+            align=min(128, _bucket(int(lens_np.max()), 16)))
+        # bucket the packed size to bound retraces
+        total_b = _bucket(plan.total, self.ecfg.packed_bucket)
+        gb = np.zeros(total_b, np.int32)
+        gs = np.zeros(total_b, np.int32)
+        valid = np.zeros(total_b, bool)
+        gb[:plan.total] = plan.gather_b
+        gs[:plan.total] = plan.gather_s
+        valid[:plan.total] = plan.valid
+        self.last_plan = plan
+        q_rows, q_pos, q_seg = D.build_query_layout(
+            [int(l) for l in lens_np], gamma)
+        override = D.make_attn_override(gb, gs, valid, q_rows)
+        inp = jnp.concatenate([last, cand], axis=1)          # (N, gamma+1)
+        tokens_flat = inp.reshape(1, -1)
+        logits, cache = T.verify_step_packed(
+            self.llm.params, self.llm.cfg, self.llm_pool.cache,
+            tokens=tokens_flat, positions=jnp.asarray(q_pos),
+            segments=jnp.asarray(q_seg), attn_override=override)
+        self.llm_pool.cache = cache
+        return logits[0].reshape(N, gamma + 1, -1)
+
+    def _accept_rates_per_ssm(self, assign, ids, n_acc):
+        rates = []
+        for j in range(len(self.ssms)):
+            vals = [n_acc[i] / self.ecfg.gamma for i, rid in enumerate(ids)
+                    if assign.get(rid) == j]
+            rates.append(float(np.mean(vals)) if vals else 0.5)
+        return rates
+
+    def _simulate_slot(self, per_ssm_batch, mb,
+                       kv_cells_per_req=0.0) -> P.SimResult:
+        cost = self.cost
+        if self.ecfg.straggler_mitigation:
+            cost = self._with_straggler_mitigation(cost, per_ssm_batch)
+        return P.simulate(cost, per_ssm_batch, mb, kv_cells_per_req)
+
+    def _with_straggler_mitigation(self, cost, per_ssm_batch):
+        """Inject random stragglers; mitigation re-dispatches the straggling
+        micro-batch to the fastest live SSM (bounded delay)."""
+        jitter = np.random.default_rng(len(self.slot_log)).exponential(
+            1.0, len(self.ssms))
+        slow = jitter > self.ecfg.straggler_factor
+        if not slow.any():
+            return cost
+        per_tok = list(cost.ssm_time_per_token)
+        fastest = float(min(t for j, t in enumerate(per_tok)
+                            if j not in self.failed_ssms))
+        for j in range(len(per_tok)):
+            if slow[j] and per_ssm_batch[j] > 0:
+                self.straggler_redispatches += 1
+                # re-dispatch: pay the fastest replica's time + small penalty
+                per_tok[j] = fastest * 1.5
+        return dataclasses.replace(cost, ssm_time_per_token=per_tok)
+
+    # ------------------------------------------------------------- runs --
+    def run(self, max_slots: int = 1000) -> dict:
+        for _ in range(max_slots):
+            rec = self.step()
+            if rec.get("done") and not self.waiting:
+                break
+        return self.stats()
+
+    def stats(self) -> dict:
+        return {
+            "accepted_tokens": self.accepted_tokens,
+            "sim_time": self.sim_time,
+            "wall_time": self.wall_time,
+            "goodput_sim": self.accepted_tokens / max(self.sim_time, 1e-9),
+            "drafted": self.total_drafted,
+            "switch": self.switcher.stats,
+            "straggler_redispatches": self.straggler_redispatches,
+            "mean_accept": float(np.mean([
+                np.mean(v) for v in self._accept_by_req.values()]))
+            if self._accept_by_req else 0.0,
+        }

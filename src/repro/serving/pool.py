@@ -1,0 +1,97 @@
+"""Per-model KV-cache pools with request->row slot maps.
+
+A pool owns a fixed-capacity batched cache (static shapes: jit-friendly,
+TPU-friendly) for one model instance.  Requests are inserted by prefilling
+a single row and scattering it into the pool; rows of finished/absent
+requests are invalidated so stale K/V can never be attended.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+def _row_set(pool_tree, row: int, one_tree):
+    """Write a batch-1 cache into pool row `row`.  'scan' subtree leaves are
+    (U, B, ...): batch axis 1; tail leaves are (B, ...): axis 0."""
+    def go(pool_leaf, one_leaf, axis):
+        idx = [slice(None)] * pool_leaf.ndim
+        idx[axis] = row
+        src_idx = [slice(None)] * one_leaf.ndim
+        src_idx[axis] = 0
+        return pool_leaf.at[tuple(idx)].set(one_leaf[tuple(src_idx)])
+
+    out = {}
+    for key, sub in pool_tree.items():
+        axis = 1 if key == "scan" else 0
+        out[key] = jax.tree.map(lambda p, o: go(p, o, axis), sub,
+                                one_tree[key])
+    return out
+
+
+def _rows_invalidate(pool_tree, rows: List[int]):
+    """Mark attention slots of given rows empty (seg=-1)."""
+    if not rows:
+        return pool_tree
+    rows = jnp.asarray(rows)
+
+    def fix(entry, stacked):
+        if not (isinstance(entry, dict) and "seg" in entry):
+            return entry
+        out = dict(entry)
+        if stacked:
+            out["seg"] = entry["seg"].at[:, rows].set(-1)
+        else:
+            out["seg"] = entry["seg"].at[rows].set(-1)
+        return out
+
+    out = {}
+    for key, sub in pool_tree.items():
+        if key == "scan":
+            out[key] = {k: fix(v, True) for k, v in sub.items()}
+        else:
+            out[key] = fix(sub, False)
+    return out
+
+
+class CachePool:
+    def __init__(self, cfg, capacity: int, max_len: int):
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_len = max_len
+        self.cache = T.init_cache(cfg, capacity, max_len)
+        self.lengths = np.zeros(capacity, np.int64)
+        self.last_token = np.zeros(capacity, np.int64)
+        self.row_of: Dict[int, int] = {}
+        self._free = list(range(capacity))
+        self._row_set = jax.jit(_row_set)   # row is traced: no per-row retrace
+
+    def has(self, rid: int) -> bool:
+        return rid in self.row_of
+
+    @property
+    def free_rows(self) -> int:
+        return len(self._free)
+
+    def insert(self, rid: int, one_cache, length: int, last_token: int):
+        row = self._free.pop()
+        self.cache = self._row_set(self.cache, row, one_cache)
+        self.row_of[rid] = row
+        self.lengths[row] = length
+        self.last_token[row] = last_token
+        return row
+
+    def evict(self, rid: int):
+        row = self.row_of.pop(rid)
+        self.cache = _rows_invalidate(self.cache, [row])
+        self.lengths[row] = 0
+        self._free.append(row)
+
+    def rows(self, rids) -> np.ndarray:
+        return np.array([self.row_of[r] for r in rids], np.int32)

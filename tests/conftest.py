@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device on CPU (the 512-device override lives ONLY in
+# launch/dryrun.py).  Keep x64 off; silence jax GPU probing noise.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,64 @@
+"""Micro-batch pipeline (paper §V-B): simulator invariants + heuristic."""
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (CostModel, choose_micro_batches,
+                                 goodput_estimate, simulate,
+                                 sweep_micro_batches)
+
+
+def hetero_cost(gamma=4):
+    # 4 SSMs: fast-but-weak to slow-but-strong (paper's 68M..1.4B spread)
+    return CostModel(
+        ssm_time_per_token=[0.4e-3, 0.8e-3, 1.6e-3, 3.2e-3],
+        ssm_fixed=[0.2e-3] * 4,
+        llm_fixed=1.0e-3,
+        llm_time_per_token=1.2e-3,
+        gamma=gamma)
+
+
+def test_pipelining_reduces_llm_idle():
+    # paper's regime: heterogeneous SSM speeds dominate; the LLM waits on
+    # the slowest SSM (Fig. 6a) unless micro-batched (Fig. 6b).
+    cost = CostModel(ssm_time_per_token=[0.5e-3, 1e-3, 2e-3, 8e-3],
+                     ssm_fixed=[0.1e-3] * 4,
+                     llm_fixed=0.2e-3, llm_time_per_token=0.3e-3, gamma=4)
+    batches = [8, 8, 8, 8]
+    nosplit = simulate(cost, batches, [1, 1, 1, 1])
+    split = simulate(cost, batches, [4, 4, 4, 4])
+    assert split.llm_idle_frac < nosplit.llm_idle_frac
+    assert split.makespan < nosplit.makespan
+
+
+def test_goodput_peaks_then_degrades():
+    """Paper Fig. 13: goodput rises with micro-batches up to a point, then
+    sequentialization overhead wins."""
+    cost = CostModel(ssm_time_per_token=[0.3e-3, 4.0e-3],
+                     ssm_fixed=[0.5e-3] * 2,
+                     llm_fixed=3.0e-3, llm_time_per_token=0.8e-3, gamma=4)
+    sweep = sweep_micro_batches(cost, [12, 12], [0.7, 0.9], max_mb=10)
+    gs = [g for _, g in sweep]
+    best = int(np.argmax(gs))
+    assert 0 < best < 9          # interior optimum
+    assert gs[best] > gs[0]      # pipelining helps
+    assert gs[-1] < gs[best]     # over-splitting hurts
+
+
+def test_heuristic_close_to_optimal():
+    cost = hetero_cost()
+    batches = [8, 6, 8, 10]
+    rates = [0.4, 0.55, 0.7, 0.8]
+    mb, g_h = choose_micro_batches(cost, batches, rates)
+    sweep = sweep_micro_batches(cost, batches, rates, max_mb=12)
+    g_best = max(g for _, g in sweep)
+    assert g_h >= 0.9 * g_best, (mb, g_h, g_best)
+
+
+def test_simulator_conserves_work():
+    cost = hetero_cost()
+    batches = [4, 0, 2, 0]
+    sim = simulate(cost, batches, [2, 1, 2, 1])
+    # busy time equals sum of verification durations regardless of split
+    want = sum(cost.verify_time(s) for s in [2, 2, 1, 1])
+    assert abs(sim.llm_busy - want) < 1e-9

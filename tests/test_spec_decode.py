@@ -1,0 +1,153 @@
+"""Speculative decoding invariants: losslessness, acceptance, rollback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import spec_decode as sd
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def bundles():
+    key = jax.random.PRNGKey(7)
+    cfg_llm = registry.reduced_for("llama-7b", d_model=96, n_heads=4,
+                                   n_kv_heads=4)
+    cfg_ssm = registry.reduced_for("llama-68m", d_model=64)
+    llm = sd.Bundle(cfg_llm, T.init_params(cfg_llm, key))
+    ssm = sd.Bundle(cfg_ssm, T.init_params(cfg_ssm, jax.random.PRNGKey(8)))
+    return llm, ssm
+
+
+def _greedy_reference(llm, prompts, P, NEW, max_len):
+    B = prompts.shape[0]
+    lg, cache = llm.prefill(prompts, jnp.full((B,), P, jnp.int32), max_len)
+    lengths = jnp.full((B,), P, jnp.int32)
+    V = llm.cfg.vocab_size
+    tok = jnp.argmax(lg[:, P - 1, :V], -1, keepdims=True).astype(jnp.int32)
+    ref = [tok]
+    for _ in range(NEW - 1):
+        lg2, cache = llm.decode(cache, tok, lengths)
+        tok = jnp.argmax(lg2[:, -1, :V], -1, keepdims=True).astype(jnp.int32)
+        lengths = lengths + 1
+        ref.append(tok)
+    return jnp.concatenate(ref, axis=1)
+
+
+def _spec_decode(llm, ssm, prompts, P, NEW, gamma, seed=9):
+    B = prompts.shape[0]
+    max_len = P + NEW + gamma + 4
+    V = llm.cfg.vocab_size
+    lg, llm_cache = llm.prefill(prompts, jnp.full((B,), P, jnp.int32),
+                                max_len)
+    _, ssm_cache = ssm.prefill(prompts, jnp.full((B,), P, jnp.int32),
+                               max_len)
+    lengths = jnp.full((B,), P, jnp.int32)
+    last = jnp.argmax(lg[:, P - 1, :V], -1, keepdims=True).astype(jnp.int32)
+    emitted = [[int(last[b, 0])] for b in range(B)]
+    rng = jax.random.PRNGKey(seed)
+    accepts = []
+    it = 0
+    while min(len(e) for e in emitted) < NEW and it < 60:
+        rng, k = jax.random.split(rng)
+        out, out_len, n_acc, llm_cache, ssm_cache, lengths, last = \
+            sd.spec_iteration(llm, ssm, llm_cache, ssm_cache, last,
+                              lengths, gamma, k)
+        accepts.append(np.asarray(n_acc))
+        for b in range(B):
+            for j in range(int(out_len[b])):
+                emitted[b].append(int(out[b, j]))
+        it += 1
+    return emitted, accepts
+
+
+def test_greedy_spec_decoding_is_lossless(bundles):
+    """Greedy spec decoding emits EXACTLY the plain-LLM greedy sequence."""
+    llm, ssm = bundles
+    key = jax.random.PRNGKey(1)
+    B, P, NEW, gamma = 3, 12, 20, 4
+    prompts = jax.random.randint(key, (B, P), 1, llm.cfg.vocab_size)
+    ref = _greedy_reference(llm, prompts, P, NEW, P + NEW + gamma + 4)
+    emitted, _ = _spec_decode(llm, ssm, prompts, P, NEW, gamma)
+    for b in range(B):
+        assert emitted[b][:NEW] == [int(x) for x in ref[b][:NEW]], b
+
+
+def test_self_draft_full_acceptance(bundles):
+    """SSM == LLM weights => every candidate accepted."""
+    llm, _ = bundles
+    key = jax.random.PRNGKey(2)
+    B, P, gamma = 3, 10, 4
+    prompts = jax.random.randint(key, (B, P), 1, llm.cfg.vocab_size)
+    max_len = P + 3 * gamma + 6
+    ssm2 = sd.Bundle(llm.cfg, llm.params)
+    lg, llm_cache = llm.prefill(prompts, jnp.full((B,), P, jnp.int32),
+                                max_len)
+    _, ssm_cache = ssm2.prefill(prompts, jnp.full((B,), P, jnp.int32),
+                                max_len)
+    lengths = jnp.full((B,), P, jnp.int32)
+    V = llm.cfg.vocab_size
+    last = jnp.argmax(lg[:, P - 1, :V], -1, keepdims=True).astype(jnp.int32)
+    rng = jax.random.PRNGKey(3)
+    for _ in range(2):
+        rng, k = jax.random.split(rng)
+        out, out_len, n_acc, llm_cache, ssm_cache, lengths, last = \
+            sd.spec_iteration(llm, ssm2, llm_cache, ssm_cache, last,
+                              lengths, gamma, k)
+        assert np.all(np.asarray(n_acc) == gamma)
+
+
+def test_sampling_mode_runs_and_matches_support(bundles):
+    """Sampling verification runs; accepted tokens are draft tokens and the
+    final token has nonzero LLM probability."""
+    llm, ssm = bundles
+    key = jax.random.PRNGKey(4)
+    B, P, gamma = 2, 8, 3
+    prompts = jax.random.randint(key, (B, P), 1, llm.cfg.vocab_size)
+    max_len = P + gamma + 6
+    lg, llm_cache = llm.prefill(prompts, jnp.full((B,), P, jnp.int32),
+                                max_len)
+    _, ssm_cache = ssm.prefill(prompts, jnp.full((B,), P, jnp.int32),
+                               max_len)
+    lengths = jnp.full((B,), P, jnp.int32)
+    V = llm.cfg.vocab_size
+    last = jnp.argmax(lg[:, P - 1, :V], -1, keepdims=True).astype(jnp.int32)
+    out, out_len, n_acc, *_ = sd.spec_iteration(
+        llm, ssm, llm_cache, ssm_cache, last, lengths, gamma,
+        jax.random.PRNGKey(5), temperature=1.0)
+    assert out.shape == (B, gamma + 1)
+    assert np.all(np.asarray(out_len) >= 1)
+    assert np.all(np.asarray(out_len) <= gamma + 1)
+    assert np.all(np.asarray(out)[np.arange(B), 0] < V)
+
+
+def test_cache_rollback_invalidates_rejected_slots(bundles):
+    llm, ssm = bundles
+    key = jax.random.PRNGKey(6)
+    B, P, gamma = 2, 8, 4
+    prompts = jax.random.randint(key, (B, P), 1, llm.cfg.vocab_size)
+    max_len = P + gamma + 6
+    lg, llm_cache = llm.prefill(prompts, jnp.full((B,), P, jnp.int32),
+                                max_len)
+    _, ssm_cache = ssm.prefill(prompts, jnp.full((B,), P, jnp.int32),
+                               max_len)
+    lengths = jnp.full((B,), P, jnp.int32)
+    V = llm.cfg.vocab_size
+    last = jnp.argmax(lg[:, P - 1, :V], -1, keepdims=True).astype(jnp.int32)
+    out, out_len, n_acc, llm_cache, ssm_cache, new_len, _ = \
+        sd.spec_iteration(llm, ssm, llm_cache, ssm_cache, last, lengths,
+                          gamma, jax.random.PRNGKey(7))
+    seg = np.asarray(jax.tree.leaves(
+        {k: v["seg"] for k, v in llm_cache["scan"].items()})[0])
+    pos = np.asarray(jax.tree.leaves(
+        {k: v["pos"] for k, v in llm_cache["scan"].items()})[0])
+    nl = np.asarray(new_len)
+    for b in range(B):
+        # slots at positions >= new_len (and within the speculated range)
+        # must be invalid; below must be valid
+        bad = (pos[0, b] >= nl[b]) & (pos[0, b] <= int(lengths[b]) + gamma)
+        assert np.all(seg[0, b][bad] == -1)
+        good = (pos[0, b] >= 0) & (pos[0, b] < nl[b])
+        assert np.all(seg[0, b][good] >= 0)
