@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_batching, bench_heterogeneity,
                             bench_overall, bench_pipeline, bench_selector,
-                            bench_verification, roofline)
+                            bench_serving, bench_verification, roofline)
 
     records = []
 
@@ -30,6 +30,7 @@ def main() -> None:
         ("fig11 selector", bench_selector.main),
         ("fig12 verification", bench_verification.main),
         ("fig13 pipeline", bench_pipeline.main),
+        ("serving scheduler", bench_serving.main),
         ("roofline", roofline.main),
     ]
     failures = 0

@@ -65,16 +65,32 @@ class SimResult:
     per_ssm_finish: List[float]
 
 
+def _kv_cells(kv_cells_per_req, j: int) -> float:
+    """Attended KV cells per request for SSM j's micro-batches.
+
+    Continuous batching makes per-slot batches ragged: each SSM drafts for
+    however many requests are currently assigned to it, and those requests
+    have genuinely different context lengths.  ``kv_cells_per_req`` may
+    therefore be a single float (uniform padded grid) or a per-SSM
+    sequence of mean cells (ragged packed grid)."""
+    if kv_cells_per_req is None:
+        return 0.0
+    if isinstance(kv_cells_per_req, (int, float)):
+        return float(kv_cells_per_req)
+    return float(kv_cells_per_req[j])
+
+
 def simulate(cost: CostModel, ssm_batches: Sequence[int],
              micro_batches: Sequence[int],
-             kv_cells_per_req: float = 0.0) -> SimResult:
+             kv_cells_per_req=0.0) -> SimResult:
     """Event-time simulation of one speculation+verification iteration.
 
     ssm_batches[j]: requests drafted on SSM j.  micro_batches[j]: number of
     micro-batches SSM j splits into.  The LLM verifies micro-batches FIFO as
     they become ready; verification of micro-batch m overlaps drafting of
-    m+1 (paper Fig. 6b).  kv_cells_per_req: attended KV cells per request
-    (padded grid vs decomposed-packed grid, §V-A)."""
+    m+1 (paper Fig. 6b).  kv_cells_per_req: attended KV cells per request —
+    scalar (padded grid, §V-A) or per-SSM sequence (ragged per-slot batches
+    under continuous batching)."""
     ready: List[Tuple[float, int, int]] = []   # (ready_time, ssm, size)
     finish = [0.0] * len(ssm_batches)
     for j, (bj, mj) in enumerate(zip(ssm_batches, micro_batches)):
@@ -92,7 +108,7 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
     while ready:
         rt, j, sz = heapq.heappop(ready)
         start = max(llm_t, rt)
-        dur = cost.verify_time(sz, kv_cells_per_req * sz)
+        dur = cost.verify_time(sz, _kv_cells(kv_cells_per_req, j) * sz)
         llm_t = start + dur
         busy += dur
     makespan = llm_t
@@ -104,7 +120,7 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
 def goodput_estimate(cost: CostModel, ssm_batches: Sequence[int],
                      micro_batches: Sequence[int],
                      accept_rates: Sequence[float],
-                     kv_cells_per_req: float = 0.0) -> float:
+                     kv_cells_per_req=0.0) -> float:
     """Accepted tokens per second for one iteration under the schedule."""
     sim = simulate(cost, ssm_batches, micro_batches, kv_cells_per_req)
     if sim.makespan <= 0:
@@ -116,22 +132,25 @@ def goodput_estimate(cost: CostModel, ssm_batches: Sequence[int],
 
 def choose_micro_batches(cost: CostModel, ssm_batches: Sequence[int],
                          accept_rates: Sequence[float], *, b0: int = 2,
-                         tol: float = 0.02, max_mb: int = 16
-                         ) -> Tuple[List[int], float]:
+                         tol: float = 0.02, max_mb: int = 16,
+                         kv_cells_per_req=0.0) -> Tuple[List[int], float]:
     """Paper §V-B heuristic: iteratively split each SSM's batch further while
     the (offline-profiled) throughput does not significantly degrade."""
     n = len(ssm_batches)
     mb = [1] * n
-    best = goodput_estimate(cost, ssm_batches, mb, accept_rates)
+    best = goodput_estimate(cost, ssm_batches, mb, accept_rates,
+                            kv_cells_per_req)
     cur = [min(b0, max(1, b)) for b in ssm_batches]
-    cur_g = goodput_estimate(cost, ssm_batches, cur, accept_rates)
+    cur_g = goodput_estimate(cost, ssm_batches, cur, accept_rates,
+                             kv_cells_per_req)
     if cur_g >= best * (1 - tol):
         mb, best = cur, max(best, cur_g)
         while max(mb) < max_mb:
             nxt = [min(m + 1, max(1, b)) for m, b in zip(mb, ssm_batches)]
             if nxt == mb:
                 break
-            g = goodput_estimate(cost, ssm_batches, nxt, accept_rates)
+            g = goodput_estimate(cost, ssm_batches, nxt, accept_rates,
+                                 kv_cells_per_req)
             if g < best * (1 - tol):        # significant degradation: stop
                 break
             if g > best:

@@ -100,8 +100,21 @@ class LBSS:
         self.cnt: Dict[Tuple[int, int], int] = defaultdict(int)
         self._chunk_assign: Dict[int, int] = {}
         self._exploit_assign: Dict[int, int] = {}
+        self._exploit_cohort: frozenset = frozenset()
         self.switches = 0
         self._last: Dict[int, int] = {}
+
+    def retire(self, request_id: int):
+        """Drop a departed request (finished or preempted) from live
+        assignment state.  Under continuous batching the cohort changes
+        every slot; stale entries would otherwise occupy matching slots and
+        pin exploitation assignments to dead requests.  Learned goodput
+        estimates are kept — a preempted request (or its group) resumes
+        with everything it already learned."""
+        self._chunk_assign.pop(request_id, None)
+        self._exploit_assign.pop(request_id, None)
+        self._last.pop(request_id, None)
+        self._exploit_cohort = self._exploit_cohort - {request_id}
 
     def _group(self, i: int):
         return self.group_of.get(i, i)
@@ -172,9 +185,14 @@ class LBSS:
                 self.slot_in_phase = 0
                 self._exploit_assign = {}
         else:
-            if not self._exploit_assign or any(
-                    i not in self._exploit_assign for i in request_ids):
+            cohort = frozenset(request_ids)
+            # Re-match whenever the live cohort changed (admission,
+            # completion, preemption) — continuous batching means the set
+            # of requests is different slot to slot, and a matching
+            # computed for an old cohort misallocates the B_j slots.
+            if not self._exploit_assign or cohort != self._exploit_cohort:
                 self._exploit_assign = self._matching(request_ids)
+                self._exploit_cohort = cohort
             out = {i: self._exploit_assign[i] for i in request_ids}
             self.slot_in_phase += 1
             if self.slot_in_phase >= 2 ** self.epoch:
@@ -212,6 +230,9 @@ class EpsilonGreedy:
         self.sum[(request_id, ssm)] += goodput
         self.cnt[(request_id, ssm)] += 1
 
+    def retire(self, request_id):
+        self._last.pop(request_id, None)
+
     def assign(self, request_ids):
         out = {}
         load = [0] * self.cfg.n_ssms
@@ -245,6 +266,9 @@ class GreedyPromptLength:
 
     def observe(self, *a, **k):
         pass
+
+    def retire(self, request_id):
+        self._last.pop(request_id, None)
 
     def assign(self, request_ids):
         ordered = sorted(request_ids, key=lambda i: self.prompt_lens.get(i, 0))

@@ -44,19 +44,69 @@ class Request:
     difficulty: float
     prompt: np.ndarray          # (P,) int32
     max_new: int
+    arrival: float = 0.0        # sim-clock arrival timestamp (serving)
     # runtime state
     emitted: Optional[List[int]] = None
     done: bool = False
+    preemptions: int = 0
+    finish_time: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
 
+    @property
+    def latency(self) -> Optional[float]:
+        """End-to-end latency (arrival -> finish) on the sim clock."""
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0,
+                     start: float = 0.0) -> np.ndarray:
+    """Arrival timestamps of a Poisson process with ``rate`` requests/sec
+    (exponential inter-arrival gaps), the standard open-loop serving
+    workload model."""
+    if rate <= 0:
+        raise ValueError("arrival rate must be positive")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, n)
+    return start + np.cumsum(gaps)
+
+
+def assign_arrivals(reqs: List[Request], *, rate: Optional[float] = None,
+                    trace: Optional[np.ndarray] = None,
+                    seed: int = 0) -> List[Request]:
+    """Stamp arrival timestamps onto requests, in place.
+
+    Exactly one of ``rate`` (Poisson process) or ``trace`` (explicit
+    timestamps, e.g. replayed from a production log) must be given.
+    ``trace`` shorter than the workload raises; extra entries are ignored.
+    """
+    if (rate is None) == (trace is None):
+        raise ValueError("pass exactly one of rate= or trace=")
+    if trace is None:
+        times = poisson_arrivals(len(reqs), rate, seed)
+    else:
+        times = np.asarray(trace, np.float64)
+        if len(times) < len(reqs):
+            raise ValueError(
+                f"trace has {len(times)} timestamps for {len(reqs)} requests")
+    for r, t in zip(reqs, times):
+        r.arrival = float(t)
+    return reqs
+
 
 def make_workload(name: str, n_requests: int, vocab: int, seed: int = 0,
-                  scale: float = 1.0) -> List[Request]:
+                  scale: float = 1.0,
+                  arrival_rate: Optional[float] = None,
+                  arrival_trace: Optional[np.ndarray] = None
+                  ) -> List[Request]:
     """name in {alpaca, cp, cip, mix}.  ``scale`` shrinks lengths for CPU
-    tests."""
+    tests.  ``arrival_rate`` (Poisson, req/s) or ``arrival_trace``
+    (explicit timestamps) stamp streaming arrival times for the
+    continuous-batching scheduler; default is everything-at-t=0."""
     rng = np.random.default_rng(seed)
     table = _backbone(np.random.default_rng(seed ^ 0x5EED), vocab)
     if name == "mix":
@@ -74,4 +124,7 @@ def make_workload(name: str, n_requests: int, vocab: int, seed: int = 0,
         out.append(Request(rid=i, dataset=str(ds_name), difficulty=diff,
                            prompt=prompt.astype(np.int32), max_new=olen,
                            emitted=[]))
+    if arrival_rate is not None or arrival_trace is not None:
+        assign_arrivals(out, rate=arrival_rate, trace=arrival_trace,
+                        seed=seed ^ 0xA55)
     return out

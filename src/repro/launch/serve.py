@@ -1,12 +1,17 @@
 """SPIN serving launcher.
 
     python -m repro.launch.serve --dataset mix --requests 16 \
-        --selector lbss --gamma 4 [--no-packed] [--no-pipeline]
+        --selector lbss --gamma 4 [--no-packed] [--no-pipeline] \
+        [--arrival-rate 200] [--kv-budget 512] [--scheduler continuous]
 
 Builds the heterogeneous SSM zoo + LLM (reduced configs on CPU; the same
 code paths drive full configs on a pod, where ``--mesh`` places the LLM on
 the `model` axis via pjit and each SSM replica on a dedicated data slice —
-see DESIGN.md §6), then runs the SpinEngine until all requests finish.
+see DESIGN.md §6), then drives the continuous-batching scheduler loop
+until the request stream drains.  ``--arrival-rate`` turns the workload
+into a streaming Poisson arrival process (requests/sec on the sim clock);
+without it every request arrives at t=0.  ``--scheduler static`` keeps the
+seed-style gang-scheduled cohort baseline for comparison.
 """
 
 from __future__ import annotations
@@ -70,18 +75,36 @@ def main(argv=None):
     ap.add_argument("--max-slots", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale", type=float, default=0.3)
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson arrival rate (req/s, sim clock); "
+                         "default: all requests arrive at t=0")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="LLM pool rows (default: --requests)")
+    ap.add_argument("--kv-budget", type=int, default=None,
+                    help="total KV cells before preemption kicks in")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "static"])
     args = ap.parse_args(argv)
+    if args.arrival_rate is not None and args.arrival_rate <= 0:
+        ap.error("--arrival-rate must be positive (omit it for "
+                 "all-at-t=0 arrivals)")
+    if args.capacity is not None and args.capacity <= 0:
+        ap.error("--capacity must be positive")
 
     llm, ssms = build_zoo(args.vocab, args.seed, args.n_ssms)
     reqs = make_workload(args.dataset, args.requests, args.vocab,
-                         seed=args.seed, scale=args.scale)
-    sel = make_selector(args.selector, len(ssms), args.requests,
+                         seed=args.seed, scale=args.scale,
+                         arrival_rate=args.arrival_rate)
+    capacity = args.capacity if args.capacity is not None else args.requests
+    sel = make_selector(args.selector, len(ssms), capacity,
                         {r.rid: r.prompt_len for r in reqs}, args.seed,
                         group_of={r.rid: r.dataset for r in reqs})
     ecfg = EngineConfig(gamma=args.gamma, max_len=256,
-                        capacity=args.requests,
+                        capacity=capacity,
                         use_packed_verify=not args.no_packed,
-                        use_pipeline=not args.no_pipeline)
+                        use_pipeline=not args.no_pipeline,
+                        scheduler_policy=args.scheduler,
+                        kv_budget=args.kv_budget)
     eng = SpinEngine(llm, ssms, sel, ecfg)
     eng.add_requests(reqs)
     stats = eng.run(max_slots=args.max_slots)

@@ -1,3 +1,6 @@
 from repro.serving.engine import EngineConfig, SpinEngine
+from repro.serving.scheduler import (ContinuousScheduler, Decision,
+                                     SchedulerConfig)
 
-__all__ = ["EngineConfig", "SpinEngine"]
+__all__ = ["EngineConfig", "SpinEngine", "ContinuousScheduler",
+           "Decision", "SchedulerConfig"]

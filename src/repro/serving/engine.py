@@ -1,13 +1,21 @@
-"""SPIN's runtime engine (paper §III Fig. 7 + §V).
+"""SPIN's runtime engine (paper §III Fig. 7 + §V) with continuous batching.
 
 Per time slot:
+  0. the continuous-batching scheduler (serving/scheduler.py) admits
+     arrived requests into free CachePool rows (prefill-on-admit) and
+     preempts lowest-priority requests when the KV budget is exceeded;
   1. the selector assigns each active request to an SSM (LBSS / baselines);
      switches go through the SwitchManager (fast pre-computed switching);
   2. every SSM drafts gamma candidates for its batch (static-shape pools);
   3. the LLM verifies all candidates — padded (vanilla) or packed via
      request decomposition (§V-A);
   4. accepted tokens are committed, caches rolled back, goodput observed
-     back into the selector.
+     back into the selector; rows of finished requests are recycled and
+     immediately re-filled from the waiting queue (same step).
+
+The engine clock is the simulated time: requests whose ``arrival``
+timestamp lies in the future stay queued until the clock reaches them,
+and when the pool drains the clock fast-forwards to the next arrival.
 
 Timing: functional results are exact; the slot TIMELINE (draft/verify
 overlap with micro-batch pipelining, §V-B) is computed by the calibrated
@@ -41,6 +49,7 @@ from repro.core.switching import SwitchManager
 from repro.data.workloads import Request
 from repro.models import transformer as T
 from repro.serving.pool import CachePool, _rows_invalidate
+from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
 
 
 def _bucket(n: int, align: int = 16) -> int:
@@ -59,6 +68,11 @@ class EngineConfig:
     straggler_factor: float = 4.0
     straggler_mitigation: bool = True
     seed: int = 0
+    # continuous-batching scheduler
+    scheduler_policy: str = "continuous"   # or "static" (gang baseline)
+    # total KV cells before preemption; None -> capacity*max_len, which
+    # never binds (add_requests caps each request at max_len cells)
+    kv_budget: Optional[int] = None
 
 
 class SpinEngine:
@@ -81,7 +95,9 @@ class SpinEngine:
         self.failed_ssms: set = set()
         self.requests: Dict[int, Request] = {}
         self.assignment: Dict[int, int] = {}
-        self.waiting: List[Request] = []
+        self.scheduler = ContinuousScheduler(SchedulerConfig(
+            capacity=ecfg.capacity, max_len=ecfg.max_len, gamma=ecfg.gamma,
+            kv_budget=ecfg.kv_budget, policy=ecfg.scheduler_policy))
         self.rng = jax.random.PRNGKey(ecfg.seed)
         # metrics
         self.sim_time = 0.0
@@ -93,25 +109,88 @@ class SpinEngine:
         self._accept_by_req: Dict[int, List[float]] = {}
 
     # ------------------------------------------------------------ admin --
-    def add_requests(self, reqs: Sequence[Request]):
-        self.waiting.extend(reqs)
-        self._admit()
+    @property
+    def waiting(self) -> List[Request]:
+        """Arrived-but-not-admitted requests (scheduler queue view)."""
+        return self.scheduler.waiting
 
-    def _admit(self):
-        while self.waiting and self.llm_pool.free_rows > 0:
-            r = self.waiting.pop(0)
-            self.requests[r.rid] = r
-            prompt = np.asarray(r.prompt)
-            Pb = _bucket(len(prompt))
-            toks = np.zeros((1, Pb), np.int32)
-            toks[0, :len(prompt)] = prompt
-            lengths = jnp.asarray([len(prompt)], jnp.int32)
-            logits, cache = self.llm.prefill(jnp.asarray(toks), lengths,
-                                             self.ecfg.max_len)
+    def add_requests(self, reqs: Sequence[Request]):
+        """Submit requests.  Arrival timestamps on the requests are
+        honoured: a request whose ``arrival`` lies in the simulated future
+        stays pending until the engine clock reaches it."""
+        for r in reqs:
+            # worst-case KV cells this request can ever occupy: full
+            # context + speculation window.  Validating here keeps every
+            # later (re-)prefill in bounds — a silent out-of-range scatter
+            # would corrupt the cache instead of erroring.
+            need = r.prompt_len + r.max_new + self.ecfg.gamma + 1
+            if need > self.ecfg.max_len:
+                raise ValueError(
+                    f"request {r.rid} needs up to {need} KV slots "
+                    f"(prompt {r.prompt_len} + max_new {r.max_new} + "
+                    f"gamma+1) > max_len={self.ecfg.max_len}")
+        self.scheduler.submit(reqs)
+        self._schedule()
+
+    def _schedule(self):
+        """Ask the scheduler for this instant's decision and apply it:
+        preemptions release rows/KV first, then admissions prefill into
+        the freed rows."""
+        dec = self.scheduler.plan(self.sim_time)
+        for r in dec.preempt:
+            self._preempt(r)
+        for r in dec.admit:
+            self._admit_one(r)
+
+    def _admit_one(self, r: Request):
+        """Prefill-on-admit.  Fresh requests prefill their prompt; a
+        preempted request re-prefills prompt + committed tokens, so its
+        greedy continuation is bit-identical to an uninterrupted run.
+        On re-admission the last emitted token has not been fed back yet —
+        it becomes the pool's last_token, everything before it is
+        context."""
+        self.requests[r.rid] = r
+        tokens = np.concatenate([np.asarray(r.prompt, np.int64),
+                                 np.asarray(r.emitted[:-1] if r.emitted
+                                            else [], np.int64)])
+        L = len(tokens)
+        row = np.zeros((1, _bucket(L)), np.int32)
+        row[0, :L] = tokens
+        lengths = jnp.asarray([L], jnp.int32)
+        logits, cache = self.llm.prefill(jnp.asarray(row), lengths,
+                                         self.ecfg.max_len)
+        if r.emitted:
+            last = int(r.emitted[-1])
+        else:
             last = int(jnp.argmax(
-                logits[0, len(prompt) - 1, :self.llm.cfg.vocab_size]))
+                logits[0, L - 1, :self.llm.cfg.vocab_size]))
             r.emitted = [last]
-            self.llm_pool.insert(r.rid, cache, len(prompt), last)
+        self.llm_pool.insert(r.rid, cache, L, last)
+        self.scheduler.mark_admitted(r, self.sim_time)
+
+    def _preempt(self, r: Request):
+        """Release the request's row and draft-pool slot; generated tokens
+        stay on the Request, so nothing decoded is lost."""
+        rid = r.rid
+        if self.llm_pool.has(rid):
+            self.llm_pool.evict(rid)
+        j = self.assignment.pop(rid, None)
+        if j is not None and self.ssm_pools[j].has(rid):
+            self.ssm_pools[j].evict(rid)
+        if hasattr(self.selector, "retire"):
+            self.selector.retire(rid)
+        self.scheduler.mark_preempted(r, self.sim_time)
+
+    def _finish(self, r: Request):
+        r.done = True
+        r.finish_time = self.sim_time
+        self.llm_pool.evict(r.rid)
+        j = self.assignment.pop(r.rid, None)
+        if j is not None and self.ssm_pools[j].has(r.rid):
+            self.ssm_pools[j].evict(r.rid)
+        if hasattr(self.selector, "retire"):
+            self.selector.retire(r.rid)
+        self.scheduler.mark_finished(r.rid)
 
     def fail_ssm(self, j: int):
         """Replica failure: drain its requests, zero its capacity."""
@@ -122,9 +201,22 @@ class SpinEngine:
             self.assignment.pop(rid, None)
 
     # --------------------------------------------------------- one slot --
+    def _active(self) -> List[Request]:
+        return [r for r in self.requests.values()
+                if not r.done and self.llm_pool.has(r.rid)]
+
     def step(self) -> dict:
         t_wall = time.perf_counter()
-        active = [r for r in self.requests.values() if not r.done]
+        self._schedule()
+        active = self._active()
+        if not active:
+            nxt = self.scheduler.next_arrival()
+            if nxt is not None:
+                # pool drained: fast-forward the sim clock to the next
+                # arrival and admit it
+                self.sim_time = max(self.sim_time, nxt)
+                self._schedule()
+                active = self._active()
         if not active:
             return {"done": True}
         ids = [r.rid for r in active]
@@ -159,29 +251,29 @@ class SpinEngine:
             rows = pool.rows(rids)
             for rid, row in zip(rids, rows):
                 drafts[rid] = cand[row]
-            draft_times.append(self.cost.draft_time(j, pool.capacity))
+            # ragged per-slot batch: cost covers the requests actually
+            # assigned this slot, not the static pool capacity
+            draft_times.append(self.cost.draft_time(j, len(rids)))
         self.total_drafted += sum(per_ssm_batch) * self.ecfg.gamma
 
         # verification (functional, full batch)
         n_acc, out, out_len = self._verify(ids, drafts)
 
         # simulated slot timeline (pipeline §V-B); verification cost sees
-        # the padded vs decomposed-packed KV grid size (§V-A)
+        # the padded vs decomposed-packed KV grid size (§V-A), ragged per
+        # SSM under continuous batching
         accept_rates = self._accept_rates_per_ssm(assign, ids, n_acc)
-        n_active = max(1, len(ids))
-        if self.ecfg.use_packed_verify and hasattr(self, "last_plan"):
-            kv_cells_per_req = self.last_plan.total / n_active
-        else:
-            kv_cells_per_req = float(np.max(self.llm_pool.lengths)
-                                     + self.ecfg.gamma + 1)
+        kv_cells_per_req = self._kv_cells_per_ssm(assign, ids)
         if self.ecfg.use_pipeline:
             mb = self.ecfg.micro_batches or P.choose_micro_batches(
-                self.cost, per_ssm_batch, accept_rates)[0]
+                self.cost, per_ssm_batch, accept_rates,
+                kv_cells_per_req=kv_cells_per_req)[0]
         else:
             mb = [1] * len(self.ssms)
         slot = self._simulate_slot(per_ssm_batch, mb, kv_cells_per_req)
 
         # commit tokens, update request state, observe goodput
+        self.sim_time += slot.makespan
         slot_tokens = 0
         for i, rid in enumerate(ids):
             r = self.requests[rid]
@@ -193,22 +285,21 @@ class SpinEngine:
             self._accept_by_req.setdefault(rid, []).append(
                 float(n_acc[i]) / self.ecfg.gamma)
             if len(r.emitted) - 1 >= r.max_new:
-                r.done = True
-                self.llm_pool.evict(rid)
-                j = self.assignment.pop(rid, None)
-                if j is not None and self.ssm_pools[j].has(rid):
-                    self.ssm_pools[j].evict(rid)
+                self._finish(r)
         self.accepted_tokens += slot_tokens
-        self.sim_time += slot.makespan
         self.wall_time += time.perf_counter() - t_wall
 
         # fast-switching prediction for next slot (§IV-C)
         self._precompute_switches(ids)
-        self._admit()
+        # recycle rows freed by finished requests within the SAME step:
+        # queued arrivals are admitted into them before the slot returns
+        self._schedule()
 
         rec = {"tokens": slot_tokens, "sim_time": slot.makespan,
                "llm_idle": slot.llm_idle_frac, "micro_batches": mb,
-               "active": len(ids)}
+               "active": len(ids),
+               "running": len(self.scheduler.running),
+               "queued": len(self.scheduler.waiting)}
         self.slot_log.append(rec)
         return rec
 
@@ -365,6 +456,29 @@ class SpinEngine:
         self.llm_pool.cache = cache
         return logits[0].reshape(N, gamma + 1, -1)
 
+    def _kv_cells_per_ssm(self, assign, ids):
+        """Attended KV cells per request, per SSM, for the timing model.
+
+        Continuous batching makes per-slot batches ragged: requests on one
+        SSM have genuinely different context lengths.  Padded verification
+        attends the uniform max-length grid (a scalar, same for every
+        SSM); packed verification attends each request's true context,
+        normalised so the total matches the decomposition plan's packed
+        cell count (alignment overhead included)."""
+        gamma = self.ecfg.gamma
+        if not ids:
+            return 0.0
+        if not (self.ecfg.use_packed_verify and hasattr(self, "last_plan")):
+            return float(np.max(self.llm_pool.lengths)) + gamma + 1
+        raw = {rid: float(self.llm_pool.lengths[self.llm_pool.row_of[rid]])
+               + gamma + 1 for rid in ids}
+        scale = self.last_plan.total / max(1.0, sum(raw.values()))
+        cells = []
+        for j in range(len(self.ssms)):
+            vals = [raw[rid] * scale for rid in ids if assign.get(rid) == j]
+            cells.append(float(np.mean(vals)) if vals else 0.0)
+        return cells
+
     def _accept_rates_per_ssm(self, assign, ids, n_acc):
         rates = []
         for j in range(len(self.ssms)):
@@ -402,11 +516,13 @@ class SpinEngine:
     def run(self, max_slots: int = 1000) -> dict:
         for _ in range(max_slots):
             rec = self.step()
-            if rec.get("done") and not self.waiting:
+            if rec.get("done") and not self.scheduler.outstanding:
                 break
         return self.stats()
 
     def stats(self) -> dict:
+        lat = [r.latency for r in self.requests.values()
+               if r.latency is not None]
         return {
             "accepted_tokens": self.accepted_tokens,
             "sim_time": self.sim_time,
@@ -414,6 +530,9 @@ class SpinEngine:
             "goodput_sim": self.accepted_tokens / max(self.sim_time, 1e-9),
             "drafted": self.total_drafted,
             "switch": self.switcher.stats,
+            "scheduler": self.scheduler.stats,
+            "mean_latency": float(np.mean(lat)) if lat else 0.0,
+            "p95_latency": float(np.percentile(lat, 95)) if lat else 0.0,
             "straggler_redispatches": self.straggler_redispatches,
             "mean_accept": float(np.mean([
                 np.mean(v) for v in self._accept_by_req.values()]))

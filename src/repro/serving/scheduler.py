@@ -1,0 +1,193 @@
+"""Continuous-batching request scheduler for the SPIN engine.
+
+The seed engine stepped one fixed cohort of requests per time slot: rows of
+the LLM ``CachePool`` were filled once up front and capacity idled as
+requests finished.  Under *serving* conditions (streaming arrivals, mixed
+lengths, a finite KV budget) that throws away exactly the goodput the
+paper's mechanisms buy — SpecInfer / SpecServe-style systems integrate
+speculative decoding with a continuous-batching scheduler for this reason.
+
+This module is the policy half of that scheduler; ``serving/engine.py``
+owns the mechanics (prefill-on-admit, cache eviction).  Per time slot the
+engine calls :meth:`ContinuousScheduler.plan` with the current simulated
+clock and applies the returned decision:
+
+* **arrivals** — submitted requests carry an ``arrival`` timestamp
+  (Poisson or trace-driven, see ``data/workloads.py``); they become
+  admissible only once the engine clock reaches it.
+* **admission** — waiting requests are admitted FIFO-by-arrival into free
+  ``CachePool`` rows, at slot granularity (prefill happens on admit).
+* **recycling** — rows of finished requests are freed inside the engine
+  step; the end-of-step ``plan`` immediately re-fills them, so a row never
+  idles across a slot boundary while work is queued.
+* **preemption** — when the projected KV demand of the running set exceeds
+  ``kv_budget`` cells, the lowest-priority (latest-arrived) requests are
+  evicted and re-enqueued for re-prefill.  At least ``min_running``
+  requests always keep their rows, and an empty pool always admits, so the
+  engine can never deadlock at full capacity.
+
+The ``static`` policy reproduces the seed behaviour (admit a cohort only
+when the pool has fully drained) and is kept as the baseline that
+``benchmarks/bench_serving.py`` compares against.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence
+
+from repro.data.workloads import Request
+
+POLICIES = ("continuous", "static")
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    capacity: int                      # LLM pool rows
+    max_len: int = 256
+    gamma: int = 4                     # speculation window (KV headroom)
+    kv_budget: Optional[int] = None    # total KV cells; None -> cap*max_len
+    policy: str = "continuous"
+    min_running: int = 1               # never preempt below this
+
+
+@dataclasses.dataclass
+class Decision:
+    """One slot's scheduling decision, applied by the engine in order:
+    preemptions first (rows + KV cells freed), then admissions."""
+    admit: List[Request]
+    preempt: List[Request]
+
+    @property
+    def empty(self) -> bool:
+        return not (self.admit or self.preempt)
+
+
+class ContinuousScheduler:
+    """Tracks the request lifecycle: pending (future arrival) -> waiting
+    (arrived, no row) -> running (owns a CachePool row) -> finished;
+    preemption moves running -> waiting with generated tokens intact."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        if cfg.policy not in POLICIES:
+            raise ValueError(f"unknown policy {cfg.policy!r}")
+        self.cfg = cfg
+        self.kv_budget = (cfg.kv_budget if cfg.kv_budget is not None
+                          else cfg.capacity * cfg.max_len)
+        self._pending: List = []           # heap of (arrival, seq, Request)
+        self._seq = 0
+        self.waiting: List[Request] = []   # arrived, FIFO by (arrival, seq)
+        self.running: Dict[int, Request] = {}
+        self.finished: List[int] = []
+        self.preemptions = 0
+        self.admissions = 0
+        self._wait_since: Dict[int, float] = {}   # rid -> enqueue clock
+        self.queue_wait = 0.0              # total waiting-time accumulated
+
+    # ----------------------------------------------------------- intake --
+    def submit(self, reqs: Sequence[Request]):
+        for r in reqs:
+            heapq.heappush(self._pending,
+                           (float(r.arrival), self._seq, r))
+            self._seq += 1
+
+    def poll(self, now: float):
+        """Move every request whose arrival time has passed into the
+        waiting queue."""
+        while self._pending and self._pending[0][0] <= now + 1e-12:
+            arrival, _, r = heapq.heappop(self._pending)
+            self.waiting.append(r)
+            self._wait_since[r.rid] = max(now, arrival)
+
+    @property
+    def outstanding(self) -> bool:
+        return bool(self._pending or self.waiting or self.running)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._pending[0][0] if self._pending else None
+
+    # ----------------------------------------------------------- policy --
+    def kv_need(self, r: Request) -> int:
+        """KV cells the request needs for its next slot: committed context
+        plus the speculation window (gamma drafts + 1 bonus token)."""
+        ctx = r.prompt_len + max(0, len(r.emitted or []) - 1)
+        return ctx + self.cfg.gamma + 1
+
+    def plan(self, now: float) -> Decision:
+        self.poll(now)
+        if self.cfg.policy == "static":
+            return self._plan_static()
+        return self._plan_continuous()
+
+    def _plan_static(self) -> Decision:
+        """Seed-style gang scheduling: a new cohort is admitted only once
+        the pool has fully drained."""
+        admit: List[Request] = []
+        if not self.running:
+            while self.waiting and len(admit) < self.cfg.capacity:
+                admit.append(self.waiting.pop(0))
+        return Decision(admit=admit, preempt=[])
+
+    def _plan_continuous(self) -> Decision:
+        admit: List[Request] = []
+        preempt: List[Request] = []
+        # Preempt while projected demand exceeds the KV budget.  Victims
+        # are the lowest-priority = latest-arrived runners; the oldest
+        # min_running requests always keep their rows (guaranteed
+        # progress -> no livelock).
+        runners = sorted(self.running.values(),
+                         key=lambda r: (r.arrival, r.rid))
+        demand = sum(self.kv_need(r) for r in runners)
+        while demand > self.kv_budget and len(runners) > self.cfg.min_running:
+            victim = runners.pop()
+            demand -= self.kv_need(victim)
+            preempt.append(victim)
+        # Admit FIFO into freed/free rows while the budget allows.  An
+        # empty pool admits unconditionally (a single oversized request
+        # must still run, otherwise the queue deadlocks).
+        occupied = len(self.running) - len(preempt)
+        while self.waiting and occupied + len(admit) < self.cfg.capacity:
+            r = self.waiting[0]
+            if (demand + self.kv_need(r) > self.kv_budget
+                    and occupied + len(admit) >= self.cfg.min_running):
+                break
+            self.waiting.pop(0)
+            admit.append(r)
+            demand += self.kv_need(r)
+        return Decision(admit=admit, preempt=preempt)
+
+    # ------------------------------------------- engine acknowledgements --
+    def mark_admitted(self, r: Request, now: float):
+        self.running[r.rid] = r
+        self.admissions += 1
+        since = self._wait_since.pop(r.rid, None)
+        if since is not None:
+            self.queue_wait += max(0.0, now - since)
+
+    def mark_preempted(self, r: Request, now: float):
+        """Back to the waiting queue with emitted tokens intact; the engine
+        re-prefills prompt+emitted on re-admission.  Queue order stays
+        FIFO-by-arrival so a preempted old request outranks new arrivals."""
+        self.running.pop(r.rid, None)
+        r.preemptions += 1
+        self.preemptions += 1
+        bisect.insort(self.waiting, r, key=lambda x: (x.arrival, x.rid))
+        self._wait_since[r.rid] = now
+
+    def mark_finished(self, rid: int):
+        self.running.pop(rid, None)
+        self.finished.append(rid)
+
+    # ------------------------------------------------------------ stats --
+    @property
+    def stats(self) -> dict:
+        return {
+            "policy": self.cfg.policy,
+            "kv_budget": self.kv_budget,
+            "admissions": self.admissions,
+            "preemptions": self.preemptions,
+            "finished": len(self.finished),
+            "queue_wait": self.queue_wait,
+        }

@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim.
+
+`hypothesis` is a dev-only dependency; a bare environment (CI bootstrap,
+minimal container) must still *collect* the property-test modules and run
+their example-based tests.  Importing from here instead of hypothesis
+directly gives the real decorators when hypothesis is installed and
+skip-marking stand-ins when it is not:
+
+    from hypcompat import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy expression (st.lists(st.integers()), ...)
+        so module-level @given(...) arguments still evaluate."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        def deco(fn):
+            return fn
+        return deco

@@ -94,7 +94,10 @@ def test_lowering_on_tiny_mesh_end_to_end():
     with mesh, shd.use_rules(mesh, rules):
         lowered = jitted.lower(ab, ab_opt, batch)
     compiled = lowered.compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older jax: one dict per device
+        cost = cost[0]
+    assert cost["flops"] > 0
     mem = compiled.memory_analysis()
     assert mem.temp_size_in_bytes >= 0
 
