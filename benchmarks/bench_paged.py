@@ -1,0 +1,186 @@
+"""Paged vs dense KV layout: the ISSUE-2 acceptance benchmarks.
+
+Four records, all on the reduced CPU zoo (trends, not absolute numbers —
+the layout asymptotics are backend-independent):
+
+* **admission latency vs pool capacity** — dense ``insert`` functionally
+  rewrites the whole ``capacity x max_len`` tree (scales with capacity);
+  paged ``insert`` scatters exactly the prompt's blocks (flat in
+  capacity).
+* **per-step decode time** — dense attends the full ``max_len`` grid per
+  row; paged gathers only the live blocks (bucketed), so step time tracks
+  the live context.
+* **max concurrent requests at a fixed KV-cell budget** — dense reserves
+  ``max_len`` cells per row whether used or not; paged holds whole blocks
+  of actual context.  Acceptance: >= 1.5x more concurrent requests.
+* **bit-identical outputs** — both engine layouts on one fixed Poisson
+  trace must emit exactly the same accepted tokens per request.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selector import LBSS, SelectorConfig
+from repro.data.workloads import make_workload
+from repro.launch.serve import build_zoo
+from repro.serving.engine import EngineConfig, SpinEngine, _bucket
+from repro.serving.pool import DenseCachePool, PagedCachePool
+
+VOCAB = 128
+MAX_LEN = 256
+BLOCK = 16
+PROMPT = 40                      # typical live context in the workloads
+
+
+def _prefill(llm, L, plen):
+    row = np.zeros((1, _bucket(L)), np.int32)
+    row[0, :L] = np.arange(L) % VOCAB
+    return llm.prefill(jnp.asarray(row), jnp.asarray([L], jnp.int32), plen)
+
+
+def _median_us(fn, iters=12, warmup=3):
+    ts = []
+    for i in range(iters + warmup):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts[warmup:]))
+
+
+def bench_admission(emit, llm):
+    """Admission (insert-into-pool) latency as pool capacity grows."""
+    lat = {"dense": {}, "paged": {}}
+    for capacity in (4, 16, 64):
+        dense = DenseCachePool(llm.cfg, capacity, MAX_LEN)
+        paged = PagedCachePool(llm.cfg, capacity, MAX_LEN, BLOCK)
+        _, cache_d = _prefill(llm, PROMPT, MAX_LEN)
+        _, cache_p = _prefill(llm, PROMPT, paged.prefill_len(_bucket(PROMPT)))
+
+        def ins_dense():
+            dense.insert(0, cache_d, PROMPT, 1)
+            jax.block_until_ready(jax.tree.leaves(dense.cache)[0])
+            dense.evict(0)
+
+        def ins_paged():
+            paged.insert(0, cache_p, PROMPT, 1)
+            jax.block_until_ready(jax.tree.leaves(paged.cache)[0])
+            paged.evict(0)
+
+        lat["dense"][capacity] = _median_us(ins_dense)
+        lat["paged"][capacity] = _median_us(ins_paged)
+        emit(f"paged_admission[cap={capacity}]", lat["paged"][capacity],
+             f"dense={lat['dense'][capacity]:.0f}us "
+             f"paged={lat['paged'][capacity]:.0f}us")
+    d_scale = lat["dense"][64] / max(lat["dense"][4], 1e-9)
+    p_scale = lat["paged"][64] / max(lat["paged"][4], 1e-9)
+    emit("paged_admission_scaling[cap 4->64]", 0.0,
+         f"dense={d_scale:.2f}x paged={p_scale:.2f}x "
+         f"(paged ~flat, dense ~linear in capacity)")
+    return d_scale, p_scale
+
+
+def bench_decode_step(emit, llm):
+    """One batched decode step, context PROMPT, pool at MAX_LEN."""
+    B = 8
+    dense = DenseCachePool(llm.cfg, B, MAX_LEN)
+    paged = PagedCachePool(llm.cfg, B, MAX_LEN, BLOCK)
+    for r in range(B):
+        _, cd = _prefill(llm, PROMPT, MAX_LEN)
+        dense.insert(r, cd, PROMPT, 1)
+        _, cp = _prefill(llm, PROMPT, paged.prefill_len(_bucket(PROMPT)))
+        paged.insert(r, cp, PROMPT, 1)
+        paged.ensure(r, PROMPT + 2)
+    lengths = jnp.asarray(dense.lengths, jnp.int32)
+    tok = jnp.asarray(dense.last_token, jnp.int32)[:, None]
+    bt, _ = paged.block_table_array()
+
+    def step_dense():
+        lg, _ = llm.decode(dense.cache, tok, lengths)
+        jax.block_until_ready(lg)
+
+    def step_paged():
+        lg, _ = llm.decode_paged(paged.cache, tok, lengths, bt)
+        jax.block_until_ready(lg)
+
+    du = _median_us(step_dense)
+    pu = _median_us(step_paged)
+    emit("paged_decode_step[B=8,ctx=40]", pu,
+         f"dense={du:.0f}us paged={pu:.0f}us speedup={du / pu:.2f}x "
+         f"(dense attends {MAX_LEN} cells/row, paged "
+         f"{int(bt.shape[1]) * BLOCK})")
+
+
+def bench_concurrency(emit, llm):
+    """Concurrent requests at the same physical KV-cell budget."""
+    budget = 2048                           # cells of HBM for KV
+    dense_cap = budget // MAX_LEN           # dense: a row IS max_len cells
+    dense = DenseCachePool(llm.cfg, dense_cap, MAX_LEN)
+    paged = PagedCachePool(llm.cfg, 64, MAX_LEN, BLOCK,
+                           num_blocks=budget // BLOCK)
+    _, cd = _prefill(llm, PROMPT, MAX_LEN)
+    _, cp = _prefill(llm, PROMPT, paged.prefill_len(_bucket(PROMPT)))
+    n_dense = n_paged = 0
+    while dense.can_admit(PROMPT):
+        dense.insert(n_dense, cd, PROMPT, 1)
+        n_dense += 1
+    while paged.can_admit(PROMPT):
+        paged.insert(n_paged, cp, PROMPT, 1)
+        n_paged += 1
+    ratio = n_paged / max(n_dense, 1)
+    emit("paged_concurrency[budget=2048cells,ctx=40]", 0.0,
+         f"dense={n_dense} paged={n_paged} ratio={ratio:.2f}x")
+    return ratio
+
+
+def bench_equivalence(emit, llm, ssms):
+    """Both layouts, one fixed trace: identical accepted tokens."""
+    def run(layout):
+        reqs = make_workload("mix", 8, VOCAB, seed=17, scale=0.25,
+                             arrival_rate=200.0)
+        sel = LBSS(SelectorConfig(n_ssms=len(ssms),
+                                  batch_limits=[4] * len(ssms),
+                                  alpha=4, beta=2, seed=3),
+                   group_of={r.rid: r.dataset for r in reqs})
+        ecfg = EngineConfig(gamma=3, max_len=128, capacity=4,
+                            packed_bucket=128, straggler_mitigation=False,
+                            kv_layout=layout, block_size=BLOCK)
+        eng = SpinEngine(llm, ssms, sel, ecfg)
+        eng.add_requests(reqs)
+        t0 = time.perf_counter()
+        st = eng.run(max_slots=600)
+        wall = (time.perf_counter() - t0) * 1e6
+        return eng, st, wall
+
+    dense_eng, dense_st, dense_us = run("dense")
+    paged_eng, paged_st, paged_us = run("paged")
+    identical = all(
+        dense_eng.requests[rid].emitted == paged_eng.requests[rid].emitted
+        for rid in dense_eng.requests)
+    emit("paged_equivalence[fixed trace]", paged_us,
+         f"identical={identical} dense_wall={dense_us / 1e3:.0f}ms "
+         f"paged_wall={paged_us / 1e3:.0f}ms "
+         f"goodput_dense={dense_st['goodput_sim']:.1f} "
+         f"goodput_paged={paged_st['goodput_sim']:.1f}")
+    return identical
+
+
+def main(emit):
+    llm, ssms = build_zoo(VOCAB, seed=0, n_ssms=2)
+    bench_admission(emit, llm)
+    bench_decode_step(emit, llm)
+    ratio = bench_concurrency(emit, llm)
+    identical = bench_equivalence(emit, llm, ssms)
+    if ratio < 1.5:
+        raise AssertionError(
+            f"paged concurrency ratio {ratio:.2f}x below the 1.5x bar")
+    if not identical:
+        raise AssertionError("paged engine diverged from dense outputs")
+
+
+if __name__ == "__main__":
+    main(lambda n, u, d: print(f"{n},{u:.1f},{d}"))

@@ -70,12 +70,14 @@ def main(emit):
              f"continuous_vs_static={speedup:.2f}x")
 
     # KV pressure: a budget far below capacity*max_len forces preemption;
-    # the run must still drain (re-prefill on re-admission, losslessly)
+    # the run must still drain (re-prefill on re-admission, losslessly).
+    # 64 cells = 4 blocks of 16 under the paged layout: requests fit at
+    # admission (1 block each) and outgrow the budget mid-flight.
     t0 = time.perf_counter()
-    st = _run(llm, ssms, "continuous", 500.0, kv_budget=48, capacity=3)
+    st = _run(llm, ssms, "continuous", 500.0, kv_budget=64, capacity=3)
     us = (time.perf_counter() - t0) * 1e6
     sch = st["scheduler"]
-    emit("serving_kv_pressure[budget=48]", us,
+    emit("serving_kv_pressure[budget=64]", us,
          f"goodput={st['goodput_sim']:.1f}tok/s "
          f"preemptions={sch['preemptions']} "
          f"finished={sch['finished']} unfinished={st['unfinished']}")

@@ -1,26 +1,51 @@
 """Benchmark runner — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV per record.  Wall-clock numbers are
-CPU (reduced models, trends); "goodput" numbers use the calibrated event
-simulator (see DESIGN.md §8); full-scale numbers live in the roofline
-section (compiled dry-run artifacts)."""
+Prints ``name,us_per_call,derived`` CSV per record and writes the same
+records as machine-readable JSON to ``results/BENCH_serving.json`` (one
+object per record: name / us / derived / section) so CI can track the
+perf trajectory per PR.  Wall-clock numbers are CPU (reduced models,
+trends); "goodput" numbers use the calibrated event simulator (see
+DESIGN.md §8); full-scale numbers live in the roofline section (compiled
+dry-run artifacts).
+
+``--sections`` selects a comma-separated subset by substring (e.g.
+``--sections serving,paged`` is the CI smoke set).
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import traceback
 
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+JSON_PATH = os.path.join(RESULTS_DIR, "BENCH_serving.json")
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated substrings selecting sections "
+                         "(default: all)")
+    ap.add_argument("--json-path", default=JSON_PATH,
+                    help="where to write the JSON record file")
+    args = ap.parse_args(argv)
+
     from benchmarks import (bench_batching, bench_heterogeneity,
-                            bench_overall, bench_pipeline, bench_selector,
-                            bench_serving, bench_verification, roofline)
+                            bench_overall, bench_paged, bench_pipeline,
+                            bench_selector, bench_serving,
+                            bench_verification, roofline)
 
     records = []
+    section_name = [""]
 
     def emit(name, us, derived):
         line = f"{name},{us:.1f},{derived}"
-        records.append(line)
+        records.append({"name": name, "us": round(float(us), 1),
+                        "derived": str(derived),
+                        "section": section_name[0]})
         print(line, flush=True)
 
     sections = [
@@ -31,11 +56,21 @@ def main() -> None:
         ("fig12 verification", bench_verification.main),
         ("fig13 pipeline", bench_pipeline.main),
         ("serving scheduler", bench_serving.main),
+        ("paged kv", bench_paged.main),
         ("roofline", roofline.main),
     ]
+    if args.sections:
+        keys = [k.strip() for k in args.sections.split(",") if k.strip()]
+        sections = [(n, fn) for n, fn in sections
+                    if any(k in n for k in keys)]
+        if not sections:
+            print(f"# no section matches {args.sections!r}")
+            sys.exit(2)
+
     failures = 0
     for name, fn in sections:
         print(f"# === {name} ===", flush=True)
+        section_name[0] = name
         try:
             fn(emit)
         except Exception:                                  # noqa: BLE001
@@ -43,6 +78,14 @@ def main() -> None:
             print(f"# SECTION FAILED: {name}", flush=True)
             traceback.print_exc()
     print(f"# {len(records)} records, {failures} failed sections")
+
+    out_dir = os.path.dirname(args.json_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.json_path, "w") as f:
+        json.dump({"records": records, "failed_sections": failures,
+                   "sections_run": [n for n, _ in sections]}, f, indent=2)
+    print(f"# wrote {args.json_path}")
     if failures:
         sys.exit(1)
 

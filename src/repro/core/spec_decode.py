@@ -42,12 +42,41 @@ class Bundle:
         self._decode = jax.jit(
             lambda p, cache, toks, lengths: T.decode_step(
                 p, self.cfg, cache, tokens=toks, lengths=lengths))
+        self._decode_paged = None
+        self._verify_paged = None
 
     def prefill(self, toks, lengths, max_len):
         return self._prefill(self.params, toks, lengths, max_len)
 
     def decode(self, cache, toks, lengths):
         return self._decode(self.params, cache, toks, lengths)
+
+    def decode_paged(self, cache, toks, lengths, block_tables):
+        """Decode against a paged block pool (serving/pool.PagedCachePool).
+        block_tables is a *traced* argument: table contents change every
+        step without retracing."""
+        if self._decode_paged is None:
+            from repro.serving.paged import decode_step_paged
+            self._decode_paged = jax.jit(
+                lambda p, c, t, l, bt: decode_step_paged(
+                    p, self.cfg, c, tokens=t, lengths=l, block_tables=bt))
+        return self._decode_paged(self.params, cache, toks, lengths,
+                                  block_tables)
+
+    def verify_paged(self, cache, tokens, positions, segments, q_rows,
+                     block_tables, block_ids, block_owner):
+        """Packed verification gathering KV fragments straight from the
+        paged block pool (no flat packed copy)."""
+        if self._verify_paged is None:
+            from repro.serving.paged import verify_step_paged
+            self._verify_paged = jax.jit(
+                lambda p, c, t, pos, seg, qr, bt, ids, ow: verify_step_paged(
+                    p, self.cfg, c, tokens=t, positions=pos, segments=seg,
+                    q_rows=qr, block_tables=bt, block_ids=ids,
+                    block_owner=ow))
+        return self._verify_paged(self.params, cache, tokens, positions,
+                                  segments, q_rows, block_tables, block_ids,
+                                  block_owner)
 
     @property
     def has_recurrent_state(self) -> bool:
@@ -74,15 +103,21 @@ def sample(probs, rng):
 # ------------------------------------------------------------------ draft --
 
 def draft(ssm: Bundle, cache, last_tokens, lengths, gamma: int, rng,
-          temperature: float = 0.0, collect_probs: bool = False):
+          temperature: float = 0.0, collect_probs: bool = False,
+          block_tables=None):
     """Generate gamma candidates. last_tokens: (B,1) previous accepted token.
-    Returns (cand (B,gamma), qprobs (B,gamma,V)|None, cache)."""
+    Returns (cand (B,gamma), qprobs (B,gamma,V)|None, cache).
+    block_tables routes the decode steps through the paged KV pool."""
     B = last_tokens.shape[0]
     cands, qs = [], []
     tok = last_tokens
     for g in range(gamma):
         rng, k = jax.random.split(rng)
-        logits, cache = ssm.decode(cache, tok, lengths + g)
+        if block_tables is not None:
+            logits, cache = ssm.decode_paged(cache, tok, lengths + g,
+                                             block_tables)
+        else:
+            logits, cache = ssm.decode(cache, tok, lengths + g)
         probs = logits_to_probs(logits[:, -1], temperature,
                                 ssm.cfg.vocab_size)
         tok = (jnp.argmax(probs, -1, keepdims=True) if temperature <= 0

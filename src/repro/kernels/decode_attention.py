@@ -69,16 +69,30 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
-def decode_attention(q, k, v, lengths, *, bk: int = 512,
+def decode_attention(q, k, v, lengths, *, bk=None,
                      interpret: bool = False):
-    """q: (B, H, D); k, v: (B, S, Kh, D); lengths: (B,).  Returns (B,H,D)."""
+    """q: (B, H, D); k, v: (B, S, Kh, D); lengths: (B,).  Returns (B,H,D).
+
+    An explicit ``bk`` must divide S: caches are allocated at
+    block-aligned max_len (see serving/pool.py), so re-padding K/V here
+    would copy the entire cache on EVERY decode step just to round the
+    tail tile — the exact per-step HBM traffic this kernel exists to
+    avoid.  ``bk=None`` picks the largest tile <= 512 that divides S.
+    """
     B, H, D = q.shape
     S, Kh = k.shape[1], k.shape[2]
+    if bk is None:
+        bk = min(512, S)
+        while S % bk:
+            bk //= 2
+    elif S % bk:
+        raise ValueError(
+            f"KV length {S} is not a multiple of bk={bk}; allocate the "
+            f"cache block-aligned (or pick bk dividing S) instead of "
+            f"paying a full-cache pad copy per step")
     scale = 1.0 / np.sqrt(D)
-    S_p = int(np.ceil(S / bk) * bk)
-    kp = jnp.pad(k, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
-    nk = S_p // bk
+    kp, vp = k, v
+    nk = S // bk
 
     out = pl.pallas_call(
         functools.partial(_kernel, nk=nk, bk=bk, scale=scale),

@@ -10,6 +10,9 @@ import jax
 
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import (
+    paged_decode_attention as _paged_decode,
+    paged_verify_attention as _paged_verify)
 from repro.kernels.verify_attention import verify_attention as _verify
 
 
@@ -32,7 +35,25 @@ def flash_attention(q, k, v, *, window: int = 0, bq: int = 128,
     return _flash(q, k, v, window=window, bq=bq, bk=bk, interpret=interpret)
 
 
-def decode_attention(q, k, v, lengths, *, bk: int = 512, interpret=None):
+def decode_attention(q, k, v, lengths, *, bk=None, interpret=None):
     if interpret is None:
         interpret = _auto_interpret()
     return _decode(q, k, v, lengths, bk=bk, interpret=interpret)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _paged_decode(q, k_pool, v_pool, block_tables, lengths,
+                         interpret=interpret)
+
+
+def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
+                           q_seg, q_pos, block_ids, block_owner, *,
+                           bq: int = 128, interpret=None):
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
+                         q_seg, q_pos, block_ids, block_owner,
+                         bq=bq, interpret=interpret)

@@ -1,0 +1,271 @@
+"""Paged KV attention kernels — decode and packed-verify over a block pool.
+
+The serving engine's paged layout stores KV in a per-model *block pool*
+``(num_blocks, block_size, Kh, D)``; each request owns an ordered list of
+physical blocks (its *block table*).  Both kernels here address the pool
+through block tables prefetched into SMEM (``PrefetchScalarGridSpec``), so
+the index map of the KV BlockSpec resolves a *logical* block to a
+*physical* one before the DMA is issued — the kernels stream exactly the
+live blocks of the batch, never the free pool and never padding up to a
+``bk`` multiple of the dense cache length.
+
+``paged_decode_attention``
+  grid = (B, NB_max): one query token per row vs its block list.  The KV
+  index map clamps the logical block index to the row's live block count,
+  so trailing grid steps revisit the last live block and Pallas elides the
+  DMA (revisited block => no new copy); compute is skipped via ``pl.when``.
+
+``paged_verify_attention``
+  grid = (Tq/bq, M): SPIN packed verification (Eq. 13 segment-restricted
+  softmax) where the packed KV is the concatenation of the *live* blocks of
+  all requests being verified, gathered fragment-by-fragment straight from
+  the pool — no flat packed KV copy is ever materialized.  ``block_ids``
+  lists the M live physical blocks (any order / fragmentation);
+  ``block_owner`` carries the owning request's segment id per block, so a
+  whole KV tile is skipped when its owner cannot match the query tile.
+
+Block sizing: one KV tile is (block_size, Kh, D).  With block_size=128,
+Kh=8, D=128 bf16 that is 512 KiB/tile — comfortably double-buffered in
+16 MiB VMEM; block_size=16 remains correct (CPU/test shapes) but
+under-utilizes the MXU on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+# ----------------------------------------------------------------- decode --
+
+def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, nb: int, bs: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    kv_pos = j * bs + jax.lax.iota(jnp.int32, bs)
+
+    @pl.when(j * bs < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale       # (H, D)
+        k = k_ref[0].astype(jnp.float32)               # (bs, Kh, D)
+        v = v_ref[0].astype(jnp.float32)
+        H, D = q.shape
+        Kh = k.shape[1]
+        G = H // Kh
+        qg = q.reshape(Kh, G, D)
+        s = jnp.einsum("kgd,skd->kgs", qg, k)          # (Kh, G, bs)
+        mask = kv_pos < length
+        s = jnp.where(mask[None, None, :], s, NEG)
+        m_prev = m_ref[...].reshape(Kh, G)
+        l_prev = l_ref[...].reshape(Kh, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, -1e29)
+        p = jnp.where(mask[None, None, :], jnp.exp(s - m_safe[..., None]),
+                      0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("kgs,skd->kgd", p, v)
+        acc_ref[...] = (acc_ref[...].reshape(Kh, G, D) * corr[..., None]
+                        + pv).reshape(Kh * G, D)
+        m_ref[...] = m_new.reshape(1, Kh * G)
+        l_ref[...] = l_new.reshape(1, Kh * G)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        l = l_ref[...].reshape(-1)
+        o = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        o_ref[0, ...] = jnp.where((l > 0)[:, None], o, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           interpret: bool = False):
+    """q: (B, H, D); k_pool, v_pool: (N, bs, Kh, D);
+    block_tables: (B, NB) int32 physical block per logical block (< 0 =
+    unallocated); lengths: (B,) live KV prefix per row.  Returns (B, H, D).
+
+    Requires ``lengths[b] <= allocated_blocks(b) * bs`` — the pool
+    allocator's append-a-block invariant.
+    """
+    B, H, D = q.shape
+    N, bs, Kh, _ = k_pool.shape
+    NB = block_tables.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    bt = block_tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    def kv_map(b, j, bt_ref, len_ref):
+        # clamp to the row's last live block: trailing grid steps revisit
+        # it (no fresh DMA) and pl.when skips their compute.
+        live = jnp.maximum(pl.cdiv(len_ref[b], bs) - 1, 0)
+        jj = jnp.minimum(j, live)
+        return (jnp.maximum(bt_ref[b, jj], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, NB),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, bs, Kh, D), kv_map),
+            pl.BlockSpec((1, bs, Kh, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, H), jnp.float32),
+            pltpu.VMEM((1, H), jnp.float32),
+            pltpu.VMEM((H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, nb=NB, bs=bs, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(bt, lengths, q, k_pool, v_pool)
+
+
+# ----------------------------------------------------------------- verify --
+
+def _verify_kernel(ids_ref, owner_ref, q_seg_ref, q_pos_ref,
+                   pos_ref, seg_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, nb: int, scale: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_seg = q_seg_ref[...]                  # (BQ,)
+    q_pos = q_pos_ref[...]
+    owner = owner_ref[j]                    # scalar: segment owning block j
+    kv_pos = pos_ref[0]                     # (bs,)
+    # a pool slot is attendable iff its block is live (owner >= 0) and the
+    # slot itself holds committed/accepted KV (pool seg >= 0)
+    kv_seg = jnp.where(seg_ref[0] >= 0, owner, -1)
+
+    q_lo, q_hi = jnp.min(q_seg), jnp.max(q_seg)
+    not_future = jnp.min(jnp.where(kv_seg >= 0, kv_pos,
+                                   jnp.iinfo(jnp.int32).max)) <= jnp.max(q_pos)
+
+    @pl.when((owner >= q_lo) & (owner <= q_hi) & (owner >= 0) & not_future)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * scale      # (BQ, H, D)
+        k = k_ref[0].astype(jnp.float32)                # (bs, Kh, D)
+        v = v_ref[0].astype(jnp.float32)
+        BQ, H, D = q.shape
+        bs, Kh, _ = k.shape
+        G = H // Kh
+        qg = q.reshape(BQ, Kh, G, D)
+        s = jax.lax.dot_general(
+            qg.transpose(1, 2, 0, 3).reshape(Kh, G * BQ, D),
+            k.transpose(1, 2, 0),
+            (((2,), (1,)), ((0,), (0,))))               # (Kh, G*BQ, bs)
+        s = s.reshape(Kh, G, BQ, bs).transpose(2, 0, 1, 3)  # (BQ,Kh,G,bs)
+        mask = (q_seg[:, None] == kv_seg[None, :]) \
+            & (kv_seg[None, :] >= 0) \
+            & (kv_pos[None, :] <= q_pos[:, None])       # (BQ, bs)
+        s = jnp.where(mask[:, None, None, :], s, NEG)
+
+        m_prev = m_ref[...].reshape(BQ, Kh, G)
+        l_prev = l_ref[...].reshape(BQ, Kh, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, -1e29)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.transpose(1, 2, 0, 3).reshape(Kh, G * BQ, bs),
+            v.transpose(1, 0, 2),
+            (((2,), (1,)), ((0,), (0,))))               # (Kh, G*BQ, D)
+        pv = pv.reshape(Kh, G, BQ, D).transpose(2, 0, 1, 3)
+        acc_ref[...] = (acc_ref[...].reshape(BQ, Kh, G, D)
+                        * corr[..., None] + pv).reshape(BQ, Kh * G, D)
+        m_ref[...] = m_new.reshape(BQ, Kh * G)
+        l_ref[...] = l_new.reshape(BQ, Kh * G)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+        o = jnp.where((l > 0)[..., None], o, 0.0)
+        o_ref[...] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
+                           q_seg, q_pos, block_ids, block_owner, *,
+                           bq: int = 128, interpret: bool = False):
+    """Packed verification over live pool blocks (paper Eq. 13, paged).
+
+    q: (Tq, H, D) — all requests' verification tokens flattened;
+    k_pool, v_pool: (N, bs, Kh, D); pool_seg, pool_pos: (N, bs) per-slot
+    validity (-1 = empty) and absolute position;
+    q_seg, q_pos: (Tq,) request segment / position per query;
+    block_ids: (M,) physical ids of the live blocks (any order);
+    block_owner: (M,) request segment owning each listed block (-1 = padding
+    entry: the block is skipped).  Returns (Tq, H, D).
+    """
+    Tq, H, D = q.shape
+    N, bs, Kh, _ = k_pool.shape
+    M = block_ids.shape[0]
+    scale = 1.0 / np.sqrt(D)
+
+    Tq_p = int(np.ceil(Tq / bq) * bq)
+    qp = jnp.pad(q, ((0, Tq_p - Tq), (0, 0), (0, 0)))
+    pad_i32 = lambda x, n: jnp.pad(x.astype(jnp.int32), (0, n),
+                                   constant_values=-1)
+    q_seg_p = pad_i32(q_seg, Tq_p - Tq)
+    q_pos_p = pad_i32(q_pos, Tq_p - Tq)
+    ids = jnp.maximum(block_ids.astype(jnp.int32), 0)
+    owner = block_owner.astype(jnp.int32)
+
+    blk = lambda i, j, ids, ow: (ids[j], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Tq_p // bq, M),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j, ids, ow: (i,)),
+            pl.BlockSpec((bq,), lambda i, j, ids, ow: (i,)),
+            pl.BlockSpec((1, bs), blk),
+            pl.BlockSpec((1, bs), blk),
+            pl.BlockSpec((bq, H, D), lambda i, j, ids, ow: (i, 0, 0)),
+            pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow:
+                         (ids[j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow:
+                         (ids[j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, H, D), lambda i, j, ids, ow: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, H), jnp.float32),
+            pltpu.VMEM((bq, H), jnp.float32),
+            pltpu.VMEM((bq, H, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_verify_kernel, nb=M, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tq_p, H, D), q.dtype),
+        interpret=interpret,
+    )(ids, owner, q_seg_p, q_pos_p, pool_pos.astype(jnp.int32),
+      pool_seg.astype(jnp.int32), qp, k_pool, v_pool)
+    return out[:Tq]

@@ -60,6 +60,32 @@ def mha_ref(q, k, v, *, causal=True, window=0):
     return o.reshape(B, S, H, Dh).astype(q.dtype)
 
 
+def paged_decode_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Gather each row's block list into a dense view, then plain decode.
+    q: (B, H, D); pools: (N, bs, Kh, D); block_tables: (B, NB) (< 0 =
+    unallocated); lengths: (B,)."""
+    B = q.shape[0]
+    N, bs = k_pool.shape[0], k_pool.shape[1]
+    bt = jnp.maximum(block_tables, 0)
+    k = k_pool[bt].reshape(B, -1, *k_pool.shape[2:])
+    v = v_pool[bt].reshape(B, -1, *v_pool.shape[2:])
+    return decode_ref(q, k, v, lengths)
+
+
+def paged_verify_ref(q, k_pool, v_pool, pool_seg, pool_pos,
+                     q_seg, q_pos, block_ids, block_owner):
+    """Gather the live blocks into a flat packed view, then Eq. (13)."""
+    ids = jnp.maximum(block_ids, 0)
+    bs = k_pool.shape[1]
+    k = k_pool[ids].reshape(-1, *k_pool.shape[2:])
+    v = v_pool[ids].reshape(-1, *v_pool.shape[2:])
+    slot_seg = pool_seg[ids].reshape(-1)
+    kv_pos = pool_pos[ids].reshape(-1)
+    owner = jnp.repeat(block_owner, bs)
+    kv_seg = jnp.where((slot_seg >= 0) & (owner >= 0), owner, -1)
+    return verify_attention_ref(q, k, v, q_seg, q_pos, kv_seg, kv_pos)
+
+
 def decode_ref(q, k, v, lengths):
     """GQA decode: one query token per row against a long KV cache.
     q: (B, H, D); k, v: (B, S, Kh, D); lengths: (B,) valid KV prefix."""

@@ -2,7 +2,8 @@
 
     python -m repro.launch.serve --dataset mix --requests 16 \
         --selector lbss --gamma 4 [--no-packed] [--no-pipeline] \
-        [--arrival-rate 200] [--kv-budget 512] [--scheduler continuous]
+        [--arrival-rate 200] [--kv-budget 512] [--scheduler continuous] \
+        [--kv-layout paged|dense] [--block-size 16]
 
 Builds the heterogeneous SSM zoo + LLM (reduced configs on CPU; the same
 code paths drive full configs on a pod, where ``--mesh`` places the LLM on
@@ -81,10 +82,22 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=None,
                     help="LLM pool rows (default: --requests)")
     ap.add_argument("--kv-budget", type=int, default=None,
-                    help="total KV cells before preemption kicks in")
+                    help="total KV cells before preemption kicks in "
+                         "(paged layout: rounded down to whole blocks and "
+                         "enforced as the physical block pool)")
     ap.add_argument("--scheduler", default="continuous",
                     choices=["continuous", "static"])
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["paged", "dense"],
+                    help="KV memory layout: block-table paging (default) "
+                         "or the legacy dense capacity x max_len grid")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV cells per physical block (paged layout); "
+                         "128 matches TPU tile granularity at full scale, "
+                         "16 keeps reduced CPU runs snappy")
     args = ap.parse_args(argv)
+    if args.block_size <= 0:
+        ap.error("--block-size must be positive")
     if args.arrival_rate is not None and args.arrival_rate <= 0:
         ap.error("--arrival-rate must be positive (omit it for "
                  "all-at-t=0 arrivals)")
@@ -104,7 +117,9 @@ def main(argv=None):
                         use_packed_verify=not args.no_packed,
                         use_pipeline=not args.no_pipeline,
                         scheduler_policy=args.scheduler,
-                        kv_budget=args.kv_budget)
+                        kv_budget=args.kv_budget,
+                        kv_layout=args.kv_layout,
+                        block_size=args.block_size)
     eng = SpinEngine(llm, ssms, sel, ecfg)
     eng.add_requests(reqs)
     stats = eng.run(max_slots=args.max_slots)

@@ -205,6 +205,26 @@ def init_cache(cfg, batch, max_len):
     return _make_cache(cfg, batch, max_len, make)
 
 
+def _check_pageable(cfg):
+    kinds = set(cfg.unit) | set(cfg.tail)
+    bad = kinds - {C.ATTN, C.MOE, C.SHARED_ATTN}
+    if bad:
+        raise ValueError(f"paged KV needs attention-only models; {cfg.name} "
+                         f"has recurrent-state blocks {sorted(bad)}")
+    if cfg.sliding_window:
+        raise ValueError("paged KV does not support sliding-window ring "
+                         "buffers (window tail lives in the dense layout)")
+
+
+def init_paged_cache(cfg, num_blocks, block_size):
+    """Paged KV block pool: same tree structure as ``init_cache`` but the
+    leading cache axes are (physical block, slot-in-block) instead of
+    (request row, position) — requests address it through block tables
+    (serving/pool.py).  Attention-only models; see serving/paged.py."""
+    _check_pageable(cfg)
+    return init_cache(cfg, num_blocks, block_size)
+
+
 def abstract_cache(cfg, batch, max_len):
     return _make_cache(cfg, batch, max_len,
                        lambda sh, dt: jax.ShapeDtypeStruct(sh, dt))
@@ -501,10 +521,13 @@ def prefill(params, cfg, *, tokens=None, inputs_embeds=None,
 
 
 def decode_step(params, cfg, cache, *, tokens=None, inputs_embeds=None,
-                lengths=None, segments=None, opts: Opts = Opts()):
+                lengths=None, segments=None, attn_override=None,
+                opts: Opts = Opts()):
     """One generation step. tokens: (B, T) with T new tokens per row (T=1 for
     plain serving; T=gamma+1 for SPIN verification rows).
-    lengths: (B,) current context length per row.  Returns (logits, cache)."""
+    lengths: (B,) current context length per row.  Returns (logits, cache).
+    attn_override (optional) replaces attention + KV write-back per layer —
+    the paged-KV path (serving/paged.py) routes block tables through it."""
     x = _inputs_to_x(cfg, params, tokens, inputs_embeds, None)
     B, T, _ = x.shape
     positions = lengths[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
@@ -530,7 +553,7 @@ def decode_step(params, cfg, cache, *, tokens=None, inputs_embeds=None,
     x = constrain(x, "batch", "seq", "act_embed")
     x, cache, _ = _run_stack(params, x, cfg, opts, positions=positions,
                              segments=segments, cache=cache,
-                             write_idx=write_idx)
+                             write_idx=write_idx, attn_override=attn_override)
     logits = _logits(cfg, params, x)
     return logits, cache
 

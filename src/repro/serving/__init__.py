@@ -1,6 +1,8 @@
 from repro.serving.engine import EngineConfig, SpinEngine
+from repro.serving.pool import DenseCachePool, PagedCachePool
 from repro.serving.scheduler import (ContinuousScheduler, Decision,
                                      SchedulerConfig)
 
 __all__ = ["EngineConfig", "SpinEngine", "ContinuousScheduler",
-           "Decision", "SchedulerConfig"]
+           "Decision", "SchedulerConfig", "DenseCachePool",
+           "PagedCachePool"]

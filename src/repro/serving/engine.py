@@ -2,8 +2,10 @@
 
 Per time slot:
   0. the continuous-batching scheduler (serving/scheduler.py) admits
-     arrived requests into free CachePool rows (prefill-on-admit) and
-     preempts lowest-priority requests when the KV budget is exceeded;
+     arrived requests into free pool rows (prefill-on-admit; under the
+     default paged layout admission allocates exactly the prompt's KV
+     blocks and the budget is enforced as physical blocks) and preempts
+     lowest-priority requests when the KV budget is exceeded;
   1. the selector assigns each active request to an SSM (LBSS / baselines);
      switches go through the SwitchManager (fast pre-computed switching);
   2. every SSM drafts gamma candidates for its batch (static-shape pools);
@@ -48,7 +50,8 @@ from repro.core.selector import LBSS, SelectorConfig
 from repro.core.switching import SwitchManager
 from repro.data.workloads import Request
 from repro.models import transformer as T
-from repro.serving.pool import CachePool, _rows_invalidate
+from repro.serving.paged import paged_compatible
+from repro.serving.pool import DenseCachePool, PagedCachePool
 from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
 
 
@@ -73,6 +76,12 @@ class EngineConfig:
     # total KV cells before preemption; None -> capacity*max_len, which
     # never binds (add_requests caps each request at max_len cells)
     kv_budget: Optional[int] = None
+    # KV memory layout: "paged" = block-table pools, budget enforced as
+    # physical blocks (kv_budget // block_size); "dense" = legacy
+    # capacity x max_len grids.  Models with recurrent state or sliding
+    # windows fall back to dense automatically.
+    kv_layout: str = "paged"
+    block_size: int = 16
 
 
 class SpinEngine:
@@ -83,10 +92,41 @@ class SpinEngine:
         self.ssms = list(ssms)
         self.selector = selector
         self.ecfg = ecfg
-        self.llm_pool = CachePool(llm.cfg, ecfg.capacity, ecfg.max_len)
-        self.ssm_pools = [
-            CachePool(b.cfg, selector.cfg.batch_limits[j], ecfg.max_len)
-            for j, b in enumerate(self.ssms)]
+        if ecfg.kv_layout not in ("paged", "dense"):
+            raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}")
+        self.paged = (ecfg.kv_layout == "paged"
+                      and paged_compatible(llm.cfg)
+                      and all(paged_compatible(b.cfg) for b in self.ssms))
+        if self.paged:
+            bs = ecfg.block_size
+            bpr = math.ceil(ecfg.max_len / bs)
+            self.max_len = bpr * bs                  # block-aligned
+            budget = (ecfg.kv_budget if ecfg.kv_budget is not None
+                      else ecfg.capacity * self.max_len)
+            # the scheduler enforces the block-rounded budget; the pool
+            # holds max(budget, one full row) physical blocks — the extra
+            # headroom exists only so an oversized request admitted into
+            # an empty pool (deadlock-freedom guarantee) always fits
+            budget_blocks = max(1, budget // bs)
+            self.llm_pool = PagedCachePool(
+                llm.cfg, ecfg.capacity, self.max_len, bs,
+                num_blocks=max(budget_blocks, bpr))
+            # draft pools are capacity-sized (fast switching keeps every
+            # row draftable); the budget-constrained pool is the LLM's
+            self.ssm_pools = [
+                PagedCachePool(b.cfg, selector.cfg.batch_limits[j],
+                               self.max_len, bs)
+                for j, b in enumerate(self.ssms)]
+            sched_budget = budget_blocks * bs
+        else:
+            self.max_len = ecfg.max_len
+            self.llm_pool = DenseCachePool(llm.cfg, ecfg.capacity,
+                                           ecfg.max_len)
+            self.ssm_pools = [
+                DenseCachePool(b.cfg, selector.cfg.batch_limits[j],
+                               ecfg.max_len)
+                for j, b in enumerate(self.ssms)]
+            sched_budget = ecfg.kv_budget
         self.switcher = SwitchManager(self.ssms)
         self.cost = cost_model or P.CostModel(
             ssm_time_per_token=[1e-4 * (j + 1) for j in range(len(ssms))],
@@ -96,8 +136,9 @@ class SpinEngine:
         self.requests: Dict[int, Request] = {}
         self.assignment: Dict[int, int] = {}
         self.scheduler = ContinuousScheduler(SchedulerConfig(
-            capacity=ecfg.capacity, max_len=ecfg.max_len, gamma=ecfg.gamma,
-            kv_budget=ecfg.kv_budget, policy=ecfg.scheduler_policy))
+            capacity=ecfg.capacity, max_len=self.max_len, gamma=ecfg.gamma,
+            kv_budget=sched_budget, policy=ecfg.scheduler_policy,
+            block_size=ecfg.block_size if self.paged else 0))
         self.rng = jax.random.PRNGKey(ecfg.seed)
         # metrics
         self.sim_time = 0.0
@@ -124,11 +165,11 @@ class SpinEngine:
             # later (re-)prefill in bounds — a silent out-of-range scatter
             # would corrupt the cache instead of erroring.
             need = r.prompt_len + r.max_new + self.ecfg.gamma + 1
-            if need > self.ecfg.max_len:
+            if need > self.max_len:
                 raise ValueError(
                     f"request {r.rid} needs up to {need} KV slots "
                     f"(prompt {r.prompt_len} + max_new {r.max_new} + "
-                    f"gamma+1) > max_len={self.ecfg.max_len}")
+                    f"gamma+1) > max_len={self.max_len}")
         self.scheduler.submit(reqs)
         self._schedule()
 
@@ -157,8 +198,11 @@ class SpinEngine:
         row = np.zeros((1, _bucket(L)), np.int32)
         row[0, :L] = tokens
         lengths = jnp.asarray([L], jnp.int32)
-        logits, cache = self.llm.prefill(jnp.asarray(row), lengths,
-                                         self.ecfg.max_len)
+        # paged: prefill a cache of just the prompt's blocks — admission
+        # cost is O(prompt blocks), independent of pool capacity/max_len
+        plen = (self.llm_pool.prefill_len(row.shape[1]) if self.paged
+                else self.max_len)
+        logits, cache = self.llm.prefill(jnp.asarray(row), lengths, plen)
         if r.emitted:
             last = int(r.emitted[-1])
         else:
@@ -220,6 +264,12 @@ class SpinEngine:
         if not active:
             return {"done": True}
         ids = [r.rid for r in active]
+        if self.paged:
+            # append-a-block growth: cover context + speculation window
+            # before this slot's decode/verify writes land
+            self.llm_pool.ensure_rows({
+                r.rid: int(self.llm_pool.lengths[self.llm_pool.row_of[r.rid]])
+                + self.ecfg.gamma + 1 for r in active})
         assign = self.selector.assign(ids)
 
         # apply switches / placements
@@ -310,10 +360,11 @@ class SpinEngine:
                                  np.asarray(r.emitted[:-1], np.int64)])
         length = len(tokens)
         cache, _ = self.switcher.switch(rid, j, tokens, length,
-                                        self.ecfg.max_len)
+                                        self.max_len)
         pool = self.ssm_pools[j]
-        if pool.free_rows == 0:
-            # evict someone not assigned here this slot
+        while not pool.can_admit(length):
+            # evict someone not assigned here this slot (frees the row
+            # and, under paging, its blocks)
             victim = next(rr for rr in pool.row_of
                           if self.assignment.get(rr) != j)
             pool.evict(victim)
@@ -332,24 +383,35 @@ class SpinEngine:
             tokens = np.concatenate([np.asarray(r.prompt),
                                      np.asarray(r.emitted[:-1], np.int64)])
             self.switcher.precompute(rid, dst, tokens, len(tokens),
-                                     self.ecfg.max_len)
+                                     self.max_len)
 
     def _draft_pool(self, j: int) -> np.ndarray:
         """Draft gamma tokens for every row of SSM j's pool; returns
         (capacity, gamma) candidates.  Inactive rows are drafted too (static
-        shape) and their cache slots re-invalidated afterwards."""
+        shape); dense rows are re-invalidated afterwards, paged idle rows
+        own no blocks so their writes are dropped at the source."""
         b = self.ssms[j]
         pool = self.ssm_pools[j]
         lengths = jnp.asarray(pool.lengths, jnp.int32)
         tok = jnp.asarray(pool.last_token, jnp.int32)[:, None]
         self.rng, k = jax.random.split(self.rng)
+        if self.paged:
+            # cover draft writes (ctx..ctx+gamma-1) and the catch-up hole
+            # fill (ctx+1..ctx+gamma+1) before any decode lands
+            pool.ensure_rows({
+                rid: int(pool.lengths[row]) + self.ecfg.gamma + 2
+                for rid, row in pool.row_of.items()})
+            bt, _ = pool.block_table_array()
+            cand, _, cache = sd.draft(b, pool.cache, tok, lengths,
+                                      self.ecfg.gamma, k, block_tables=bt)
+            pool.cache = cache
+            return np.asarray(cand)
         cand, _, cache = sd.draft(b, pool.cache, tok, lengths,
                                   self.ecfg.gamma, k)
         pool.cache = cache
         idle = [row for row in range(pool.capacity)
                 if row not in pool.row_of.values()]
-        if idle:
-            pool.cache = _rows_invalidate(pool.cache, idle)
+        pool.invalidate_rows(idle)
         return np.asarray(cand)
 
     def _verify(self, ids, drafts):
@@ -368,8 +430,13 @@ class SpinEngine:
             logits = self._verify_packed(cand, lengths, last)
         else:
             inp = jnp.concatenate([last, cand], axis=1)
-            logits, cache = self.llm.decode(self.llm_pool.cache, inp,
-                                            lengths)
+            if self.paged:
+                bt, _ = self.llm_pool.block_table_array()
+                logits, cache = self.llm.decode_paged(
+                    self.llm_pool.cache, inp, lengths, bt)
+            else:
+                logits, cache = self.llm.decode(self.llm_pool.cache, inp,
+                                                lengths)
             self.llm_pool.cache = cache
         V = self.llm.cfg.vocab_size
         greedy = jnp.argmax(logits.astype(jnp.float32)[..., :V],
@@ -382,15 +449,18 @@ class SpinEngine:
         bonus = jnp.take_along_axis(greedy, n_acc_all[:, None], axis=1)
         out_all = out_all.at[jnp.arange(N), n_acc_all].set(bonus[:, 0])
 
-        # rollback: keep accepted prefix only
-        self.llm_pool.cache = sd.invalidate_slots_jit(
-            self.llm_pool.cache, lengths + 1 + n_acc_all,
-            lengths + gamma + 1)
-        idle_rows = [row for row in range(N)
-                     if row not in self.llm_pool.row_of.values()]
-        if idle_rows:
-            self.llm_pool.cache = _rows_invalidate(self.llm_pool.cache,
-                                                   idle_rows)
+        # rollback: keep accepted prefix only (paged: trim the tail block
+        # in place — a gamma-wide seg scatter through the block table)
+        if self.paged:
+            self.llm_pool.invalidate_span(lengths + 1 + n_acc_all,
+                                          lengths + gamma + 1, W=gamma)
+        else:
+            self.llm_pool.cache = sd.invalidate_slots_jit(
+                self.llm_pool.cache, lengths + 1 + n_acc_all,
+                lengths + gamma + 1)
+            self.llm_pool.invalidate_rows(
+                [row for row in range(N)
+                 if row not in self.llm_pool.row_of.values()])
 
         # per-SSM catch-up (fill c_gamma hole) + rollback on draft pools
         for j, pool in enumerate(self.ssm_pools):
@@ -405,11 +475,19 @@ class SpinEngine:
                     continue
                 outs_j[row] = np.asarray(out_all[lrow])
                 nacc_j[row] = int(n_acc_all[lrow])
-            _, pool.cache = self.ssms[j].decode(
-                pool.cache, jnp.asarray(outs_j), pl + 1)
-            pool.cache = sd.invalidate_slots_jit(
-                pool.cache, pl + 2 + jnp.asarray(nacc_j, jnp.int32),
-                pl + gamma + 3)
+            if self.paged:
+                bt, _ = pool.block_table_array()
+                _, pool.cache = self.ssms[j].decode_paged(
+                    pool.cache, jnp.asarray(outs_j), pl + 1, bt)
+                pool.invalidate_span(
+                    pl + 2 + jnp.asarray(nacc_j, jnp.int32),
+                    pl + gamma + 3, W=gamma + 1)
+            else:
+                _, pool.cache = self.ssms[j].decode(
+                    pool.cache, jnp.asarray(outs_j), pl + 1)
+                pool.cache = sd.invalidate_slots_jit(
+                    pool.cache, pl + 2 + jnp.asarray(nacc_j, jnp.int32),
+                    pl + gamma + 3)
 
         # update lengths / last tokens on pools
         n_acc = np.zeros(len(ids), np.int64)
@@ -428,9 +506,26 @@ class SpinEngine:
         return n_acc, out, out_len
 
     def _verify_packed(self, cand, lengths, last):
-        """Packed verification via request decomposition (§V-A)."""
+        """Packed verification via request decomposition (§V-A).  Paged:
+        the packed KV is the cohort's live blocks, gathered fragment-by-
+        fragment from the pool — no flat packed copy, no padded grid."""
         gamma = self.ecfg.gamma
         N = self.llm_pool.capacity
+        if self.paged:
+            bt, _ = self.llm_pool.block_table_array()
+            ids_np, owner_np = self.llm_pool.live_blocks()
+            q_rows = np.repeat(np.arange(N, dtype=np.int32), gamma + 1)
+            offs = np.tile(np.arange(gamma + 1, dtype=np.int32), N)
+            lens_np = np.asarray(self.llm_pool.lengths, np.int64)
+            q_pos = (lens_np[q_rows] + offs).astype(np.int32)[None]
+            q_seg = q_rows[None]
+            inp = jnp.concatenate([last, cand], axis=1)   # (N, gamma+1)
+            logits, cache = self.llm.verify_paged(
+                self.llm_pool.cache, inp.reshape(1, -1), jnp.asarray(q_pos),
+                jnp.asarray(q_seg), jnp.asarray(q_rows), bt,
+                jnp.asarray(ids_np), jnp.asarray(owner_np))
+            self.llm_pool.cache = cache
+            return logits[0].reshape(N, gamma + 1, -1)
         lens_np = np.maximum(np.asarray(lengths), 1)
         plan = D.plan_decomposition(
             [int(l) for l in lens_np],
@@ -468,6 +563,19 @@ class SpinEngine:
         gamma = self.ecfg.gamma
         if not ids:
             return 0.0
+        if self.paged:
+            # attended cells are block-granular: a request costs its
+            # allocated blocks (live context rounded up to whole blocks)
+            raw = {rid: float(self.llm_pool.allocated_cells(rid))
+                   for rid in ids}
+            if not self.ecfg.use_packed_verify:
+                # padded paged decode attends the bucketed widest table
+                return float(max(raw.values()))
+            cells = []
+            for j in range(len(self.ssms)):
+                vals = [raw[rid] for rid in ids if assign.get(rid) == j]
+                cells.append(float(np.mean(vals)) if vals else 0.0)
+            return cells
         if not (self.ecfg.use_packed_verify and hasattr(self, "last_plan")):
             return float(np.max(self.llm_pool.lengths)) + gamma + 1
         raw = {rid: float(self.llm_pool.lengths[self.llm_pool.row_of[rid]])
@@ -524,6 +632,8 @@ class SpinEngine:
         lat = [r.latency for r in self.requests.values()
                if r.latency is not None]
         return {
+            "kv_layout": "paged" if self.paged else "dense",
+            "kv_blocks": (self.llm_pool.num_blocks if self.paged else None),
             "accepted_tokens": self.accepted_tokens,
             "sim_time": self.sim_time,
             "wall_time": self.wall_time,

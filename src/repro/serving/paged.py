@@ -1,0 +1,189 @@
+"""Paged-KV attention plumbing for the serving engine (XLA path).
+
+The paged ``CachePool`` stores each model's KV in a block pool
+``(num_blocks, block_size, Kh, D)``; requests own ordered lists of physical
+blocks (block tables).  The model forward never sees a dense
+``(rows, max_len)`` grid: the override closures below route every attention
+layer through the block table —
+
+* **write**: new K/V is scattered straight into the owning request's tail
+  block(s) (``flat = table[row, pos // bs] * bs + pos % bs``); rows without
+  an allocated block (idle pool rows, padding) map to an out-of-range index
+  and the scatter drops them;
+* **read**: only *live* blocks are gathered — ``(B, nb_max * bs)`` for
+  decode (nb_max = live blocks of the longest row, bucketed) and
+  ``(M * bs,)`` for packed verification (M = live blocks of the verified
+  cohort) — so per-step HBM traffic tracks the live context, not the pool
+  capacity and not ``max_len``.
+
+These mirror the Pallas kernels in ``kernels/paged_attention.py`` (the TPU
+hot path, validated against the same oracles); like the rest of the model
+stack, the engine's functional path uses the XLA formulation so results are
+identical on any backend.
+
+Entry points ``decode_step_paged`` / ``verify_step_paged`` wrap
+``models.transformer`` with the right override; ``core.spec_decode.Bundle``
+jits them per model (block tables are *traced* arguments, so a step never
+retraces when the tables' contents change).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as C
+from repro.models import transformer as T
+from repro.models.layers import attention
+
+
+def pool_dims(cache) -> Tuple[int, int]:
+    """(num_blocks, block_size) of a paged cache tree."""
+    for name, entry in cache.get("scan", {}).items():
+        if isinstance(entry, dict) and "k" in entry:
+            return entry["k"].shape[1], entry["k"].shape[2]
+    for name, entry in cache.items():
+        if isinstance(entry, dict) and "k" in entry:
+            return entry["k"].shape[0], entry["k"].shape[1]
+    raise ValueError("cache tree has no attention entries")
+
+
+def _flat_write_idx(block_tables, positions, bs: int, oob: int):
+    """Flat pool slot per (row, position); ``oob`` for unmapped positions
+    (idle row / position beyond the row's allocated blocks) — the scatter
+    drops those updates."""
+    nb = block_tables.shape[1]
+    lb = positions // bs
+    phys = jnp.take_along_axis(
+        block_tables, jnp.clip(lb, 0, nb - 1), axis=1)
+    ok = (positions >= 0) & (lb < nb) & (phys >= 0)
+    return jnp.where(ok, phys * bs + positions % bs, oob)
+
+
+def _write_kv(kv_cache, widx_flat, k_new, v_new, positions, segments,
+              num_blocks: int, bs: int):
+    """Scatter new K/V (+pos/seg) into the flattened pool; returns the
+    updated (num_blocks, bs, ...) tree.  O(new tokens), not O(pool)."""
+    Kh, hd = kv_cache["k"].shape[-2:]
+    kc = kv_cache["k"].reshape(num_blocks * bs, Kh, hd).at[widx_flat].set(
+        k_new.reshape(-1, Kh, hd).astype(kv_cache["k"].dtype))
+    vc = kv_cache["v"].reshape(num_blocks * bs, Kh, hd).at[widx_flat].set(
+        v_new.reshape(-1, Kh, hd).astype(kv_cache["v"].dtype))
+    pc = kv_cache["pos"].reshape(-1).at[widx_flat].set(positions.reshape(-1))
+    sc = kv_cache["seg"].reshape(-1).at[widx_flat].set(segments.reshape(-1))
+    return {"k": kc.reshape(num_blocks, bs, Kh, hd),
+            "v": vc.reshape(num_blocks, bs, Kh, hd),
+            "pos": pc.reshape(num_blocks, bs),
+            "seg": sc.reshape(num_blocks, bs)}
+
+
+def make_paged_decode_override(block_tables, num_blocks: int, bs: int):
+    """Attention override for decode/draft/verify-padded over a paged pool.
+
+    block_tables: (B, nb_max) int32, -1 = unallocated.  Queries of row b
+    attend the gathered view of row b's blocks (write-then-read, so the new
+    tokens attend each other causally like the dense path).
+    """
+    bt = block_tables.astype(jnp.int32)
+
+    def override(q, k_new, v_new, positions, segments, kv_cache, cfg, opts):
+        B, Tn = positions.shape
+        widx = _flat_write_idx(bt, positions, bs, num_blocks * bs)
+        new_cache = _write_kv(kv_cache, widx.reshape(-1), k_new, v_new,
+                              positions, segments, num_blocks, bs)
+        # gather each row's live blocks into a (B, nb_max*bs) view
+        nb_max = bt.shape[1]
+        slot = (jnp.maximum(bt, 0) * bs)[:, :, None] + jnp.arange(bs)
+        slot = slot.reshape(B, nb_max * bs)
+        kf = new_cache["k"].reshape(num_blocks * bs, *k_new.shape[2:])
+        vf = new_cache["v"].reshape(num_blocks * bs, *v_new.shape[2:])
+        kg, vg = kf[slot], vf[slot]
+        posg = new_cache["pos"].reshape(-1)[slot]
+        segg = new_cache["seg"].reshape(-1)[slot]
+        live = jnp.repeat(bt >= 0, bs, axis=1)
+        segg = jnp.where(live, segg, -1)
+        o = attention(q, kg, vg, q_positions=positions, kv_positions=posg,
+                      q_segments=segments, kv_segments=segg,
+                      window=cfg.sliding_window, q_block=opts.q_block)
+        return o, new_cache
+
+    return override
+
+
+def make_paged_verify_override(q_rows, block_tables, block_ids, block_owner,
+                               num_blocks: int, bs: int):
+    """Attention override for SPIN packed verification over a paged pool.
+
+    q_rows: (Tq,) pool row per flattened query token; block_ids /
+    block_owner: (M,) live physical blocks of the verified cohort and the
+    row owning each (-1 owner = padding entry).  The packed KV is gathered
+    fragment-by-fragment — no flat packed copy, no padded grid.
+    """
+    q_rows = jnp.asarray(q_rows, jnp.int32)
+    bt = block_tables.astype(jnp.int32)
+    ids = jnp.maximum(jnp.asarray(block_ids, jnp.int32), 0)
+    owner = jnp.asarray(block_owner, jnp.int32)
+    M = ids.shape[0]
+
+    def override(q, k_new, v_new, positions, segments, kv_cache, cfg, opts):
+        # q/k_new/v_new: (1, Tq, ·, hd); positions/segments: (1, Tq) with
+        # segments = owning row (Eq. 13 segment ids)
+        pos = positions[0]
+        nb = bt.shape[1]
+        lb = pos // bs
+        phys = bt[q_rows, jnp.clip(lb, 0, nb - 1)]        # (Tq,)
+        ok = (pos >= 0) & (lb < nb) & (phys >= 0)
+        widx = jnp.where(ok, phys * bs + pos % bs, num_blocks * bs)
+        # pool slots store seg=0 (valid), mirroring the dense cache
+        new_cache = _write_kv(kv_cache, widx.reshape(-1), k_new, v_new,
+                              positions, jnp.zeros_like(segments),
+                              num_blocks, bs)
+        slot = ((ids * bs)[:, None] + jnp.arange(bs)).reshape(M * bs)
+        kf = new_cache["k"].reshape(num_blocks * bs, *k_new.shape[2:])
+        vf = new_cache["v"].reshape(num_blocks * bs, *v_new.shape[2:])
+        kg, vg = kf[slot][None], vf[slot][None]
+        posg = new_cache["pos"].reshape(-1)[slot][None]
+        slot_seg = new_cache["seg"].reshape(-1)[slot]
+        segg = jnp.where((slot_seg >= 0) & (jnp.repeat(owner, bs) >= 0),
+                         jnp.repeat(owner, bs), -1)[None]
+        o = attention(q, kg, vg, q_positions=positions, kv_positions=posg,
+                      q_segments=segments, kv_segments=segg,
+                      window=cfg.sliding_window, q_block=opts.q_block)
+        return o, new_cache
+
+    return override
+
+
+# ------------------------------------------------------- model entrypoints --
+
+def decode_step_paged(params, cfg, cache, *, tokens, lengths, block_tables,
+                      opts: T.Opts = T.Opts()):
+    """Paged analogue of ``transformer.decode_step``: T new tokens per row,
+    K/V written to / read from the rows' block tables."""
+    num_blocks, bs = pool_dims(cache)
+    override = make_paged_decode_override(block_tables, num_blocks, bs)
+    return T.decode_step(params, cfg, cache, tokens=tokens, lengths=lengths,
+                         opts=opts, attn_override=override)
+
+
+def verify_step_paged(params, cfg, cache, *, tokens, positions, segments,
+                      q_rows, block_tables, block_ids, block_owner,
+                      opts: T.Opts = T.Opts()):
+    """Paged analogue of ``transformer.verify_step_packed``."""
+    num_blocks, bs = pool_dims(cache)
+    override = make_paged_verify_override(q_rows, block_tables, block_ids,
+                                          block_owner, num_blocks, bs)
+    return T.verify_step_packed(params, cfg, cache, tokens=tokens,
+                                positions=positions, segments=segments,
+                                attn_override=override, opts=opts)
+
+
+def paged_compatible(cfg) -> bool:
+    """Paged layout supports attention-family blocks (KV grids) only;
+    recurrent state (mamba2/xlstm) is O(1) per request and sliding-window
+    ring buffers have their own layout — both stay on the dense pool."""
+    kinds = set(cfg.unit) | set(cfg.tail)
+    return (kinds <= {C.ATTN, C.MOE, C.SHARED_ATTN}
+            and not cfg.sliding_window)

@@ -1,14 +1,37 @@
-"""Per-model KV-cache pools with request->row slot maps.
+"""Per-model KV-cache pools.
 
-A pool owns a fixed-capacity batched cache (static shapes: jit-friendly,
-TPU-friendly) for one model instance.  Requests are inserted by prefilling
-a single row and scattering it into the pool; rows of finished/absent
-requests are invalidated so stale K/V can never be attended.
+Two layouts share one interface (``has/insert/evict/rows/lengths/...``):
+
+``PagedCachePool`` (default)
+    KV lives in a physical *block pool* ``(num_blocks, block_size, Kh, D)``
+    with a free-block list; each request owns an ordered block table.  The
+    scheduler's KV budget *is* ``num_blocks`` — an enforced physical
+    invariant, not a model.  Admission scatters the prefilled KV into
+    exactly the prompt's blocks (O(prompt blocks), independent of pool
+    capacity); decode growth appends one block at a time; eviction /
+    preemption returns blocks to the free list in O(1) — no cache traffic.
+    Rollback of rejected drafts trims the tail block in place (a
+    ``gamma``-wide seg scatter).  Attention-only models (recurrent state is
+    O(1)/request and stays dense); see ``serving/paged.py`` for how the
+    model forward addresses the pool.
+
+``DenseCachePool`` (legacy baseline)
+    A fixed ``capacity x max_len`` batched grid; requests are inserted by
+    functionally rewriting the whole tree (O(pool)) and every row
+    physically reserves ``max_len`` cells whether used or not.  Kept as the
+    baseline ``benchmarks/bench_paged.py`` measures against and as the
+    layout for recurrent-state / sliding-window models.
+
+Block-accounting invariant (property-tested in tests/test_paged.py):
+``free_blocks + sum(blocks allocated to live rows) == num_blocks`` after
+every admit/evict/preempt/ensure sequence — blocks can never leak.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import functools
+import math
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +39,8 @@ import numpy as np
 
 from repro.models import transformer as T
 
+
+# ------------------------------------------------------------ dense layout --
 
 def _row_set(pool_tree, row: int, one_tree):
     """Write a batch-1 cache into pool row `row`.  'scan' subtree leaves are
@@ -35,10 +60,11 @@ def _row_set(pool_tree, row: int, one_tree):
     return out
 
 
-def _rows_invalidate(pool_tree, rows: List[int]):
-    """Mark attention slots of given rows empty (seg=-1)."""
-    if not rows:
-        return pool_tree
+def _rows_invalidate(pool_tree, rows):
+    """Mark attention slots of the given rows empty (seg=-1).  ``rows`` is
+    a *traced* int array — one jitted trace serves every eviction batch;
+    out-of-range entries (the fixed-width padding) are dropped by the
+    scatter."""
     rows = jnp.asarray(rows)
 
     def fix(entry, stacked):
@@ -60,7 +86,9 @@ def _rows_invalidate(pool_tree, rows: List[int]):
     return out
 
 
-class CachePool:
+class DenseCachePool:
+    """Static (capacity, max_len) batched cache with request->row slots."""
+
     def __init__(self, cfg, capacity: int, max_len: int):
         self.cfg = cfg
         self.capacity = capacity
@@ -71,6 +99,7 @@ class CachePool:
         self.row_of: Dict[int, int] = {}
         self._free = list(range(capacity))
         self._row_set = jax.jit(_row_set)   # row is traced: no per-row retrace
+        self._rows_inval = jax.jit(_rows_invalidate)
 
     def has(self, rid: int) -> bool:
         return rid in self.row_of
@@ -78,6 +107,9 @@ class CachePool:
     @property
     def free_rows(self) -> int:
         return len(self._free)
+
+    def can_admit(self, length: int) -> bool:
+        return bool(self._free)
 
     def insert(self, rid: int, one_cache, length: int, last_token: int):
         row = self._free.pop()
@@ -87,11 +119,299 @@ class CachePool:
         self.last_token[row] = last_token
         return row
 
+    def invalidate_rows(self, rows: List[int]):
+        """Batched row invalidation: ONE jitted call for any number of rows
+        (fixed width = capacity, padded with an out-of-range sentinel), so
+        evicting k rows costs one tree update instead of k retraced ones."""
+        if not rows:
+            return
+        arr = np.full(self.capacity, self.capacity, np.int32)
+        arr[:len(rows)] = rows[:self.capacity]
+        self.cache = self._rows_inval(self.cache, jnp.asarray(arr))
+
     def evict(self, rid: int):
         row = self.row_of.pop(rid)
-        self.cache = _rows_invalidate(self.cache, [row])
+        self.invalidate_rows([row])
         self.lengths[row] = 0
         self._free.append(row)
 
     def rows(self, rids) -> np.ndarray:
         return np.array([self.row_of[r] for r in rids], np.int32)
+
+
+# backward-compat name (PR1 engine/docs referred to the dense pool as
+# CachePool); the engine now picks the layout explicitly.
+CachePool = DenseCachePool
+
+
+# ------------------------------------------------------------ paged layout --
+
+def _src_seq_len(one_cache) -> int:
+    """Sequence capacity of a batch-1 dense cache (pool_dims sees it as
+    one 'block' of that many slots)."""
+    from repro.serving.paged import pool_dims
+    return pool_dims(one_cache)[1]
+
+
+def _map_attn_entries(pool_tree, fn):
+    out = {}
+    for key, sub in pool_tree.items():
+        if key == "scan":
+            out[key] = {k: fn(v, True, k) for k, v in sub.items()}
+        else:
+            out[key] = fn(sub, False, key)
+    return out
+
+
+def _blocks_write(pool_tree, one_tree, ids, *, nb: int, bs: int):
+    """Scatter the first ``nb`` blocks of a batch-1 dense cache into the
+    pool blocks ``ids`` (traced; out-of-range entries dropped).  Cost is
+    O(nb * bs) regardless of pool size."""
+    def go(entry, stacked, name):
+        src_e = one_tree["scan"][name] if stacked else one_tree[name]
+        out = {}
+        for leaf in ("k", "v", "pos", "seg"):
+            p, o = entry[leaf], src_e[leaf]
+            if stacked:                  # p: (U,N,bs,...), o: (U,1,S,...)
+                src = o[:, 0, :nb * bs]
+                src = src.reshape(src.shape[0], nb, bs, *src.shape[2:])
+                out[leaf] = p.at[:, ids].set(src.astype(p.dtype))
+            else:                        # p: (N,bs,...), o: (1,S,...)
+                src = o[0, :nb * bs].reshape(nb, bs, *o.shape[2:])
+                out[leaf] = p.at[ids].set(src.astype(p.dtype))
+        return out
+    return _map_attn_entries(pool_tree, go)
+
+
+def _blocks_invalidate(pool_tree, ids):
+    """seg = -1 over whole physical blocks (freshly re-allocated blocks may
+    hold a prior owner's slots — they must never be attendable)."""
+    def go(entry, stacked, name):
+        out = dict(entry)
+        if stacked:
+            out["seg"] = entry["seg"].at[:, ids].set(-1)
+        else:
+            out["seg"] = entry["seg"].at[ids].set(-1)
+        return out
+    return _map_attn_entries(pool_tree, go)
+
+
+def _span_invalidate(pool_tree, table, new_lengths, upper, *, bs: int,
+                     W: int, num_blocks: int):
+    """Per-row seg=-1 for positions [new_lengths, upper) — the rejected-
+    draft rollback.  W is the static span bound (gamma or gamma+1); rows
+    whose table has no block there (idle rows) resolve out-of-range and the
+    scatter drops them.  Trims the tail block in place: O(rows * W)."""
+    cap, nbmax = table.shape
+    p = new_lengths[:, None] + jnp.arange(W, dtype=jnp.int32)   # (cap, W)
+    lb = p // bs
+    phys = jnp.take_along_axis(table, jnp.clip(lb, 0, nbmax - 1), axis=1)
+    ok = (p < upper[:, None]) & (lb < nbmax) & (phys >= 0)
+    flat = jnp.where(ok, phys * bs + p % bs, num_blocks * bs).reshape(-1)
+
+    def go(entry, stacked, name):
+        seg = entry["seg"]
+        out = dict(entry)
+        if stacked:
+            U = seg.shape[0]
+            out["seg"] = seg.reshape(U, -1).at[:, flat].set(-1) \
+                            .reshape(seg.shape)
+        else:
+            out["seg"] = seg.reshape(-1).at[flat].set(-1).reshape(seg.shape)
+        return out
+    return _map_attn_entries(pool_tree, go)
+
+
+def _pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+class PagedCachePool:
+    """Block-table paged KV pool (module docstring has the full contract)."""
+
+    def __init__(self, cfg, capacity: int, max_len: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
+        bs = int(block_size)
+        if bs <= 0:
+            raise ValueError("block_size must be positive")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.block_size = bs
+        self.blocks_per_row = max(1, math.ceil(max_len / bs))
+        self.max_len = self.blocks_per_row * bs      # block-aligned
+        if num_blocks is None:
+            num_blocks = capacity * self.blocks_per_row
+        # floor: one full row must always fit (empty-pool admission of an
+        # oversized request is unconditional — no deadlock)
+        self.num_blocks = max(int(num_blocks), self.blocks_per_row)
+        self.cache = T.init_paged_cache(cfg, self.num_blocks, bs)
+        self.lengths = np.zeros(capacity, np.int64)
+        self.last_token = np.zeros(capacity, np.int64)
+        self.row_of: Dict[int, int] = {}
+        self._free_rows = list(range(capacity))
+        self._free_blocks = list(range(self.num_blocks))
+        self._table = np.full((capacity, self.blocks_per_row), -1, np.int32)
+        self._nb = np.zeros(capacity, np.int32)      # allocated blocks/row
+        self._jit: Dict[tuple, object] = {}          # (kind, statics) -> fn
+
+    # --------------------------------------------------------- accounting --
+    def has(self, rid: int) -> bool:
+        return rid in self.row_of
+
+    @property
+    def free_rows(self) -> int:
+        return len(self._free_rows)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return int(self._nb.sum())
+
+    def blocks_needed(self, length: int) -> int:
+        return min(self.blocks_per_row,
+                   max(1, math.ceil(max(int(length), 1) / self.block_size)))
+
+    def can_admit(self, length: int) -> bool:
+        return (bool(self._free_rows)
+                and len(self._free_blocks) >= self.blocks_needed(length))
+
+    def allocated_cells(self, rid: int) -> int:
+        return int(self._nb[self.row_of[rid]]) * self.block_size
+
+    def prefill_len(self, src_len: int) -> int:
+        """Block-aligned cache length the engine should prefill with before
+        ``insert`` — covers the (16-aligned) token row buffer so nothing is
+        clamped, while keeping admission O(prompt blocks)."""
+        bs = self.block_size
+        return math.ceil(src_len / bs) * bs
+
+    def rows(self, rids) -> np.ndarray:
+        return np.array([self.row_of[r] for r in rids], np.int32)
+
+    # ---------------------------------------------------------- lifecycle --
+    def _fn(self, kind: str, **statics):
+        key = (kind,) + tuple(sorted(statics.items()))
+        if key not in self._jit:
+            base = {"write": _blocks_write, "inval": _blocks_invalidate,
+                    "span": _span_invalidate}[kind]
+            fn = functools.partial(base, **statics) if statics else base
+            # donate the pool tree: the scatter updates the block pool IN
+            # PLACE instead of copying it — this is what makes admission
+            # O(prompt blocks) instead of O(pool).  Callers always
+            # reassign self.cache from the result, so the consumed buffer
+            # is never reused.
+            self._jit[key] = jax.jit(fn, donate_argnums=0)
+        return self._jit[key]
+
+    def _alloc(self, n: int) -> List[int]:
+        if n > len(self._free_blocks):
+            raise RuntimeError(
+                f"paged pool out of blocks: need {n}, "
+                f"free {len(self._free_blocks)}/{self.num_blocks} — the "
+                f"scheduler's block accounting should have preempted first")
+        return [self._free_blocks.pop() for _ in range(n)]
+
+    def insert(self, rid: int, one_cache, length: int, last_token: int):
+        """Admit a prefilled batch-1 cache: allocate the prompt's blocks and
+        scatter K/V into exactly those — O(prompt blocks), not O(pool)."""
+        nb = self.blocks_needed(length)
+        S = _src_seq_len(one_cache)
+        if S < nb * self.block_size:
+            raise ValueError(
+                f"prefilled cache covers {S} slots < {nb} blocks x "
+                f"{self.block_size}; prefill with max_len=pool.prefill_len()")
+        ids = self._alloc(nb)
+        self.cache = self._fn("write", nb=nb, bs=self.block_size)(
+            self.cache, one_cache, jnp.asarray(ids, jnp.int32))
+        row = self._free_rows.pop()
+        self.row_of[rid] = row
+        self._table[row, :nb] = ids
+        self._nb[row] = nb
+        self.lengths[row] = length
+        self.last_token[row] = last_token
+        return row
+
+    def ensure(self, rid: int, need_len: int):
+        """Append blocks until the row covers ``need_len`` cells (the
+        decode-growth path: usually one block, amortized zero)."""
+        self.ensure_rows({rid: need_len})
+
+    def ensure_rows(self, needs: Dict[int, int]):
+        """Batched growth for one slot: allocate every row's missing
+        blocks, then seg-invalidate all of them in ONE jitted call
+        (re-allocated blocks may hold a prior owner's slots) — one
+        dispatch per pool per slot, not one per grown row."""
+        deltas = {}
+        for rid, need_len in needs.items():
+            row = self.row_of[rid]
+            need = self.blocks_needed(need_len)
+            if need > int(self._nb[row]):
+                deltas[rid] = need
+        total = sum(need - int(self._nb[self.row_of[rid]])
+                    for rid, need in deltas.items())
+        if not total:
+            return
+        if total > len(self._free_blocks):     # check before mutating
+            raise RuntimeError(
+                f"paged pool out of blocks: need {total}, "
+                f"free {len(self._free_blocks)}/{self.num_blocks} — the "
+                f"scheduler's block accounting should have preempted first")
+        new_ids: List[int] = []
+        for rid, need in deltas.items():
+            row = self.row_of[rid]
+            have = int(self._nb[row])
+            ids = self._alloc(need - have)
+            self._table[row, have:need] = ids
+            self._nb[row] = need
+            new_ids.extend(ids)
+        m = _pow2(len(new_ids))               # bucket: bounded retraces
+        arr = np.full(m, self.num_blocks, np.int32)
+        arr[:len(new_ids)] = new_ids
+        self.cache = self._fn("inval")(self.cache, jnp.asarray(arr))
+
+    def evict(self, rid: int):
+        """Free the row and return its blocks — O(1), no cache traffic
+        (stale blocks are unreachable without a table entry and re-
+        invalidated on re-allocation)."""
+        row = self.row_of.pop(rid)
+        nb = int(self._nb[row])
+        self._free_blocks.extend(int(b) for b in self._table[row, :nb])
+        self._table[row, :nb] = -1
+        self._nb[row] = 0
+        self.lengths[row] = 0
+        self._free_rows.append(row)
+
+    def invalidate_span(self, new_lengths, upper, W: int):
+        """Rollback rejected drafts: seg=-1 for positions
+        [new_lengths, upper) per row (W = static span bound)."""
+        table = jnp.asarray(self._table)
+        self.cache = self._fn("span", bs=self.block_size, W=int(W),
+                              num_blocks=self.num_blocks)(
+            self.cache, table, jnp.asarray(new_lengths, jnp.int32),
+            jnp.asarray(upper, jnp.int32))
+
+    # ------------------------------------------------------------- views --
+    def block_table_array(self) -> Tuple[jnp.ndarray, int]:
+        """(capacity, nb_max) device block table, nb_max bucketed to the
+        next power of two of the longest row's allocation — attention
+        gathers scale with live context, and retraces stay O(log)."""
+        nb_max = min(self.blocks_per_row,
+                     _pow2(int(self._nb.max()) if len(self._nb) else 1))
+        return jnp.asarray(self._table[:, :nb_max]), nb_max
+
+    def live_blocks(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(block_ids, owner_rows) over all live rows, padded to a power-of
+        -two length with (0, -1) entries (owner -1 = skip)."""
+        ids: List[int] = []
+        owner: List[int] = []
+        for rid, row in self.row_of.items():
+            nb = int(self._nb[row])
+            ids.extend(int(b) for b in self._table[row, :nb])
+            owner.extend([row] * nb)
+        m = _pow2(max(1, len(ids)))
+        ids += [0] * (m - len(ids))
+        owner += [-1] * (m - len(owner))
+        return (np.asarray(ids, np.int32), np.asarray(owner, np.int32))

@@ -51,6 +51,10 @@ class SchedulerConfig:
     kv_budget: Optional[int] = None    # total KV cells; None -> cap*max_len
     policy: str = "continuous"
     min_running: int = 1               # never preempt below this
+    # paged layout: KV is allocated in whole blocks, so demand is accounted
+    # in block-rounded cells and the budget is the physical block pool —
+    # an enforced invariant, not a model.  0 = cell-granular (dense layout).
+    block_size: int = 0
 
 
 @dataclasses.dataclass
@@ -111,9 +115,15 @@ class ContinuousScheduler:
     # ----------------------------------------------------------- policy --
     def kv_need(self, r: Request) -> int:
         """KV cells the request needs for its next slot: committed context
-        plus the speculation window (gamma drafts + 1 bonus token)."""
+        plus the speculation window (gamma drafts + 1 bonus token), rounded
+        up to whole blocks under the paged layout (allocation granularity
+        = one block, so the rounded figure is what the pool will hold)."""
         ctx = r.prompt_len + max(0, len(r.emitted or []) - 1)
-        return ctx + self.cfg.gamma + 1
+        need = ctx + self.cfg.gamma + 1
+        if self.cfg.block_size > 0:
+            b = self.cfg.block_size
+            need = -(-need // b) * b
+        return need
 
     def plan(self, now: float) -> Decision:
         self.poll(now)

@@ -1,0 +1,308 @@
+"""Paged KV layout: kernel oracles, pool block accounting, engine parity.
+
+Covers the ISSUE-2 acceptance surface:
+* paged_decode / paged_verify Pallas kernels (interpret mode) vs jnp
+  oracles on GQA, ragged lengths, single-token tail blocks, and
+  fragmented (non-contiguous, shuffled) block tables;
+* PagedCachePool property test — block accounting never leaks a block
+  across random admit/evict/preempt/grow cycles;
+* the paged engine emits bit-identical accepted tokens to the dense
+  engine on a fixed trace (packed and padded verification).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+
+from repro.configs import registry
+from repro.core import spec_decode as sd
+from repro.core.selector import LBSS, SelectorConfig
+from repro.data.workloads import make_workload
+from repro.kernels import ref
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           paged_verify_attention)
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, SpinEngine
+from repro.serving.pool import PagedCachePool
+
+VOCAB = 256
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _fragmented_tables(lens, bs, num_blocks, seed=0):
+    """Allocate each row's blocks from a shuffled pool (non-contiguous,
+    interleaved across rows — the worst-case fragmentation)."""
+    rng = np.random.default_rng(seed)
+    perm = list(rng.permutation(num_blocks))
+    nb_max = max(max(1, -(-int(l) // bs)) for l in lens)
+    bt = np.full((len(lens), nb_max), -1, np.int32)
+    for b, l in enumerate(lens):
+        for k in range(max(1, -(-int(l) // bs))):
+            bt[b, k] = perm.pop()
+    return bt
+
+
+# ---------------------------------------------------------------- kernels --
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("lens,H,Kh,D,bs", [
+    ([37, 120, 61], 8, 4, 32, 16),     # GQA, ragged
+    ([17, 1, 33], 4, 1, 32, 16),       # MQA + single-token rows
+    ([16, 32], 4, 4, 16, 16),          # exact block boundaries
+    ([129], 8, 2, 64, 32),             # single-token tail block
+])
+def test_paged_decode_matches_oracle(lens, H, Kh, D, bs, dtype):
+    rng = np.random.default_rng(1)
+    nb_total = sum(max(1, -(-l // bs)) for l in lens) + 3
+    bt = _fragmented_tables(lens, bs, nb_total, seed=2)
+    B = len(lens)
+    q = _rand(jax.random.PRNGKey(0), (B, H, D), dtype)
+    kp = _rand(jax.random.PRNGKey(1), (nb_total, bs, Kh, D), dtype)
+    vp = _rand(jax.random.PRNGKey(2), (nb_total, bs, Kh, D), dtype)
+    lengths = jnp.asarray(lens, jnp.int32)
+    out = paged_decode_attention(q, kp, vp, jnp.asarray(bt), lengths,
+                                 interpret=True)
+    want = ref.paged_decode_ref(q, kp, vp, jnp.asarray(bt), lengths)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=1e-2)
+
+
+@given(lens=st.lists(st.integers(min_value=1, max_value=90), min_size=1,
+                     max_size=4),
+       seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_paged_decode_property(lens, seed):
+    H, Kh, D, bs = 4, 2, 16, 8
+    nb_total = sum(max(1, -(-l // bs)) for l in lens) + 2
+    bt = _fragmented_tables(lens, bs, nb_total, seed=seed)
+    B = len(lens)
+    q = _rand(jax.random.PRNGKey(3), (B, H, D))
+    kp = _rand(jax.random.PRNGKey(4), (nb_total, bs, Kh, D))
+    vp = _rand(jax.random.PRNGKey(5), (nb_total, bs, Kh, D))
+    lengths = jnp.asarray(lens, jnp.int32)
+    out = paged_decode_attention(q, kp, vp, jnp.asarray(bt), lengths,
+                                 interpret=True)
+    want = ref.paged_decode_ref(q, kp, vp, jnp.asarray(bt), lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-3)
+
+
+def _verify_setup(lens, bs, num_blocks, H, Kh, D, gamma, seed=0):
+    bt = _fragmented_tables(lens, bs, num_blocks, seed=seed)
+    pool_seg = np.full((num_blocks, bs), -1, np.int32)
+    pool_pos = np.full((num_blocks, bs), -1, np.int32)
+    ids, owner = [], []
+    for b, l in enumerate(lens):
+        for k in range(max(1, -(-int(l) // bs))):
+            pb = int(bt[b, k])
+            ids.append(pb)
+            owner.append(b)
+            for s in range(bs):
+                p = k * bs + s
+                if p < l:
+                    pool_seg[pb, s] = 0
+                    pool_pos[pb, s] = p
+    ids += [0, 0]                       # bucketed-list padding entries
+    owner += [-1, -1]
+    q_seg = np.repeat(np.arange(len(lens)), gamma + 1).astype(np.int32)
+    q_pos = np.concatenate(
+        [l + np.arange(gamma + 1) for l in lens]).astype(np.int32)
+    q = _rand(jax.random.PRNGKey(6), (len(q_seg), H, D))
+    kp = _rand(jax.random.PRNGKey(7), (num_blocks, bs, Kh, D))
+    vp = _rand(jax.random.PRNGKey(8), (num_blocks, bs, Kh, D))
+    return (q, kp, vp, jnp.asarray(pool_seg), jnp.asarray(pool_pos),
+            jnp.asarray(q_seg), jnp.asarray(q_pos),
+            jnp.asarray(np.asarray(ids, np.int32)),
+            jnp.asarray(np.asarray(owner, np.int32)))
+
+
+@pytest.mark.parametrize("lens,H,Kh,D,bs,bq", [
+    ([37, 120, 61], 8, 4, 32, 16, 8),
+    ([5, 5], 4, 4, 16, 8, 16),
+    ([33, 1, 97, 15], 4, 1, 32, 16, 8),
+])
+def test_paged_verify_matches_oracle(lens, H, Kh, D, bs, bq):
+    gamma = 4
+    nb = sum(max(1, -(-l // bs)) for l in lens) + 2
+    args = _verify_setup(lens, bs, nb, H, Kh, D, gamma, seed=3)
+    out = paged_verify_attention(*args, bq=bq, interpret=True)
+    want = ref.paged_verify_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-2)
+
+
+def test_paged_verify_isolation():
+    """A request's queries are COMPLETELY unaffected by other requests'
+    blocks, however the pool is fragmented."""
+    lens, H, Kh, D, bs, gamma = [24, 40], 4, 2, 16, 8, 2
+    nb = sum(-(-l // bs) for l in lens) + 2
+    q, kp, vp, pseg, ppos, qs, qpos, ids, owner = _verify_setup(
+        lens, bs, nb, H, Kh, D, gamma, seed=4)
+    out1 = paged_verify_attention(q, kp, vp, pseg, ppos, qs, qpos, ids,
+                                  owner, bq=8, interpret=True)
+    other = np.asarray(ids)[np.asarray(owner) == 1]
+    kp2 = kp.at[other].mul(100.0)
+    vp2 = vp.at[other].add(7.0)
+    out2 = paged_verify_attention(q, kp2, vp2, pseg, ppos, qs, qpos, ids,
+                                  owner, bq=8, interpret=True)
+    rows0 = np.where(np.asarray(qs) == 0)[0]
+    np.testing.assert_array_equal(np.asarray(out1)[rows0],
+                                  np.asarray(out2)[rows0])
+
+
+# ----------------------------------------------------- pool block ledger --
+
+def _pool(capacity=4, max_len=64, bs=8, num_blocks=None):
+    cfg = registry.reduced_for("llama-68m", d_model=32, n_heads=4,
+                               n_kv_heads=4, vocab_size=64, n_layers=1)
+    return PagedCachePool(cfg, capacity, max_len, bs, num_blocks=num_blocks)
+
+
+def _one_cache(pool, length):
+    S = pool.prefill_len(max(16, length))
+    return T.init_cache(pool.cfg, 1, S)
+
+
+def _ledger_ok(pool):
+    table_blocks = [int(b) for row in range(pool.capacity)
+                    for b in pool._table[row, :pool._nb[row]]]
+    assert len(set(table_blocks)) == len(table_blocks), "double allocation"
+    assert sorted(table_blocks + pool._free_blocks) == \
+        list(range(pool.num_blocks)), "blocks leaked or duplicated"
+    assert pool.free_blocks + pool.allocated_blocks == pool.num_blocks
+    assert sorted(pool.row_of.values()) == sorted(
+        set(pool.row_of.values())), "row double-booked"
+
+
+@given(ops=st.lists(st.tuples(st.sampled_from(["admit", "evict", "grow"]),
+                              st.integers(0, 7), st.integers(1, 60)),
+                    min_size=1, max_size=40))
+@settings(max_examples=15, deadline=None)
+def test_pool_block_accounting_never_leaks(ops):
+    pool = _pool()
+    for op, rid, length in ops:
+        if op == "admit" and not pool.has(rid):
+            if pool.can_admit(length):
+                pool.insert(rid, _one_cache(pool, length), length, 0)
+        elif op == "evict" and pool.has(rid):
+            pool.evict(rid)
+        elif op == "grow" and pool.has(rid):
+            need = min(int(pool.lengths[pool.row_of[rid]]) + length,
+                       pool.max_len)
+            if pool.blocks_needed(need) - pool._nb[pool.row_of[rid]] \
+                    <= pool.free_blocks:
+                pool.ensure(rid, need)
+        _ledger_ok(pool)
+    for rid in list(pool.row_of):
+        pool.evict(rid)
+        _ledger_ok(pool)
+    assert pool.free_blocks == pool.num_blocks
+
+
+def test_pool_admission_and_oversubscription_guards():
+    pool = _pool(capacity=2, max_len=64, bs=8, num_blocks=8)
+    assert pool.num_blocks == 8
+    pool.insert(0, _one_cache(pool, 40), 40, 1)       # 5 blocks
+    assert pool.free_blocks == 3
+    assert not pool.can_admit(40)                     # would need 5 > 3
+    assert pool.can_admit(20)                         # 3 blocks fit
+    pool.insert(1, _one_cache(pool, 20), 20, 1)       # takes the last 3
+    assert pool.free_blocks == 0
+    with pytest.raises(RuntimeError, match="out of blocks"):
+        pool.ensure(0, 48)                            # +1 block, none free
+    # growth past max_len clamps to blocks_per_row (dense drops the same
+    # overshoot writes), it is not an allocation error
+    pool.evict(1)
+    pool.ensure(0, pool.max_len + 10)
+    assert pool.allocated_blocks == pool.blocks_per_row
+    pool.evict(0)
+    assert pool.free_blocks == 8
+
+
+# ------------------------------------------------------- engine parity ----
+
+@pytest.fixture(scope="module")
+def models():
+    key = jax.random.PRNGKey(0)
+    cfg_llm = registry.reduced_for("llama-7b", d_model=96, n_heads=4,
+                                   n_kv_heads=4, vocab_size=VOCAB)
+    llm = sd.Bundle(cfg_llm, T.init_params(cfg_llm, key))
+    ssms = []
+    for i, (d, L) in enumerate([(32, 1), (64, 2)]):
+        c = registry.reduced_for("llama-68m", d_model=d, n_heads=4,
+                                 n_kv_heads=4, vocab_size=VOCAB, n_layers=L)
+        ssms.append(sd.Bundle(c, T.init_params(c, jax.random.PRNGKey(i + 1))))
+    return llm, ssms
+
+
+def _run_engine(llm, ssms, layout, packed, kv_budget=None):
+    sel = LBSS(SelectorConfig(n_ssms=len(ssms),
+                              batch_limits=[4] * len(ssms),
+                              alpha=4, beta=2, seed=1))
+    ecfg = EngineConfig(gamma=3, max_len=128, capacity=4,
+                        use_packed_verify=packed, packed_bucket=128,
+                        straggler_mitigation=False, kv_layout=layout,
+                        block_size=16, kv_budget=kv_budget)
+    eng = SpinEngine(llm, ssms, sel, ecfg)
+    reqs = make_workload("mix", 4, VOCAB, seed=7, scale=0.25,
+                         arrival_rate=400.0)
+    eng.add_requests(reqs)
+    eng.run(max_slots=300)
+    assert all(r.done for r in eng.requests.values())
+    return eng
+
+
+@pytest.mark.parametrize("packed", [True, False])
+def test_paged_engine_bit_identical_to_dense(models, packed):
+    """Same fixed arrival trace, same models: the paged engine must emit
+    exactly the dense engine's accepted tokens (acceptance criterion)."""
+    llm, ssms = models
+    dense = _run_engine(llm, ssms, "dense", packed)
+    paged = _run_engine(llm, ssms, "paged", packed)
+    assert paged.paged and not dense.paged
+    for rid in dense.requests:
+        assert dense.requests[rid].emitted == paged.requests[rid].emitted, rid
+    # all blocks returned once the stream drained
+    assert paged.llm_pool.free_blocks == paged.llm_pool.num_blocks
+
+
+def test_paged_engine_budget_is_physical(models):
+    """Under a binding budget the pool's live allocation never exceeds the
+    scheduler's block budget — the budget is enforced, not modeled."""
+    llm, ssms = models
+    sel = LBSS(SelectorConfig(n_ssms=len(ssms), batch_limits=[3, 3],
+                              alpha=4, beta=2, seed=1))
+    ecfg = EngineConfig(gamma=3, max_len=128, capacity=3,
+                        use_packed_verify=True, packed_bucket=128,
+                        straggler_mitigation=False, kv_budget=96,
+                        block_size=16)
+    eng = SpinEngine(llm, ssms, sel, ecfg)
+    reqs = make_workload("mix", 5, VOCAB, seed=3, scale=0.25,
+                         arrival_rate=500.0)
+    eng.add_requests(reqs)
+    budget_blocks = 96 // 16
+    peak = 0
+    for _ in range(400):
+        rec = eng.step()
+        peak = max(peak, eng.llm_pool.allocated_blocks)
+        if rec.get("done") and not eng.scheduler.outstanding:
+            break
+    assert all(r.done for r in eng.requests.values())
+    assert eng.scheduler.preemptions > 0
+    assert peak <= budget_blocks, (peak, budget_blocks)
+
+
+def test_paged_falls_back_to_dense_for_recurrent_models():
+    from repro.serving.paged import paged_compatible
+    cfg = registry.reduced_for("zamba2-1.2b", d_model=32, n_heads=4,
+                               n_kv_heads=4, vocab_size=64, n_layers=2)
+    assert not paged_compatible(cfg)   # engine auto-falls back to dense
+    with pytest.raises(ValueError, match="attention-only"):
+        T.init_paged_cache(cfg, 8, 16)

@@ -177,7 +177,9 @@ def test_finished_rows_recycled_within_same_step(models):
 
 def test_preemption_and_readmission_is_greedy_exact(models):
     llm, ssms = models
-    eng = _engine(llm, ssms, capacity=3, kv_budget=48)
+    # budget = 6 blocks of 16 cells: three requests fit at admission
+    # (2 blocks each) and outgrow the budget mid-flight -> preemption
+    eng = _engine(llm, ssms, capacity=3, kv_budget=96)
     reqs = make_workload("mix", 5, VOCAB, seed=3, scale=0.25,
                          arrival_rate=500.0)
     eng.add_requests(reqs)
