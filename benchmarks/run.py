@@ -33,9 +33,9 @@ def main(argv=None) -> None:
                     help="where to write the JSON record file")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_batching, bench_heterogeneity,
-                            bench_overall, bench_paged, bench_pipeline,
-                            bench_selector, bench_serving,
+    from benchmarks import (bench_batching, bench_chunked,
+                            bench_heterogeneity, bench_overall, bench_paged,
+                            bench_pipeline, bench_selector, bench_serving,
                             bench_verification, roofline)
 
     records = []
@@ -57,6 +57,7 @@ def main(argv=None) -> None:
         ("fig13 pipeline", bench_pipeline.main),
         ("serving scheduler", bench_serving.main),
         ("paged kv", bench_paged.main),
+        ("chunked prefill", bench_chunked.main),
         ("roofline", roofline.main),
     ]
     if args.sections:

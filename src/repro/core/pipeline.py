@@ -56,6 +56,16 @@ class CostModel:
                 + self.llm_time_per_token * batch * (self.gamma + 1)
                 + self.llm_time_per_kv_cell * kv_cells)
 
+    def prefill_time(self, tokens: int, kv_cells: float = 0.0) -> float:
+        """LLM time to ingest prompt tokens (monolithic admission or the
+        slot's chunk grants): affine in query tokens plus the attended
+        KV cells, same per-token rates as verification — prefill queries
+        run through the identical forward."""
+        if tokens <= 0:
+            return 0.0
+        return (self.llm_fixed + self.llm_time_per_token * tokens
+                + self.llm_time_per_kv_cell * kv_cells)
+
 
 @dataclasses.dataclass
 class SimResult:
@@ -82,7 +92,7 @@ def _kv_cells(kv_cells_per_req, j: int) -> float:
 
 def simulate(cost: CostModel, ssm_batches: Sequence[int],
              micro_batches: Sequence[int],
-             kv_cells_per_req=0.0) -> SimResult:
+             kv_cells_per_req=0.0, prefill_time: float = 0.0) -> SimResult:
     """Event-time simulation of one speculation+verification iteration.
 
     ssm_batches[j]: requests drafted on SSM j.  micro_batches[j]: number of
@@ -90,7 +100,11 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
     they become ready; verification of micro-batch m overlaps drafting of
     m+1 (paper Fig. 6b).  kv_cells_per_req: attended KV cells per request —
     scalar (padded grid, §V-A) or per-SSM sequence (ragged per-slot batches
-    under continuous batching)."""
+    under continuous batching).  prefill_time: LLM time spent ingesting
+    prompt tokens this slot (chunked-prefill grants or a monolithic
+    admission); it occupies the LLM before any verification starts, while
+    SSM drafting proceeds concurrently — the interleaving a token-budget
+    step planner exists to bound."""
     ready: List[Tuple[float, int, int]] = []   # (ready_time, ssm, size)
     finish = [0.0] * len(ssm_batches)
     for j, (bj, mj) in enumerate(zip(ssm_batches, micro_batches)):
@@ -103,8 +117,8 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
             t += cost.draft_time(j, sz)
             heapq.heappush(ready, (t, j, sz))
         finish[j] = t
-    llm_t = 0.0
-    busy = 0.0
+    llm_t = max(0.0, float(prefill_time))
+    busy = llm_t
     while ready:
         rt, j, sz = heapq.heappop(ready)
         start = max(llm_t, rt)

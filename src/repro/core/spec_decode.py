@@ -44,12 +44,38 @@ class Bundle:
                 p, self.cfg, cache, tokens=toks, lengths=lengths))
         self._decode_paged = None
         self._verify_paged = None
+        self._append = None
+        self._append_paged = None
 
     def prefill(self, toks, lengths, max_len):
         return self._prefill(self.params, toks, lengths, max_len)
 
     def decode(self, cache, toks, lengths):
         return self._decode(self.params, cache, toks, lengths)
+
+    def append(self, cache, toks, lengths, segments):
+        """Chunked-prefill append on a batch-1 dense row cache: ingest T
+        context tokens at positions lengths..lengths+T-1.  ``segments``
+        marks bucket-padding tokens with -1 so their KV writes land
+        invalidated and one trace serves every chunk width bucket."""
+        if self._append is None:
+            self._append = jax.jit(
+                lambda p, c, t, l, s: T.decode_step(
+                    p, self.cfg, c, tokens=t, lengths=l, segments=s))
+        return self._append(self.params, cache, toks, lengths, segments)
+
+    def append_paged(self, cache, toks, lengths, segments, block_tables):
+        """Chunked-prefill append through a paged block pool: the (1, T)
+        chunk writes straight into the row's blocks and attends its prior
+        context blocks (see serving/paged.decode_step_paged)."""
+        if self._append_paged is None:
+            from repro.serving.paged import decode_step_paged
+            self._append_paged = jax.jit(
+                lambda p, c, t, l, s, bt: decode_step_paged(
+                    p, self.cfg, c, tokens=t, lengths=l, segments=s,
+                    block_tables=bt))
+        return self._append_paged(self.params, cache, toks, lengths,
+                                  segments, block_tables)
 
     def decode_paged(self, cache, toks, lengths, block_tables):
         """Decode against a paged block pool (serving/pool.PagedCachePool).

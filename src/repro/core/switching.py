@@ -29,6 +29,12 @@ class PrecomputedKV:
     upto_length: int
     cache: object
     lengths: object
+    # sequence capacity the cache was prefilled with.  Historically always
+    # the pool's max_len; with paged pools the engine passes a bucketed
+    # width (O(context), not O(capacity)) — a switch whose context has
+    # outgrown the width falls back to a miss instead of silently dropping
+    # catch-up KV writes past the grid.
+    width: int = 0
 
 
 class SwitchManager:
@@ -55,18 +61,27 @@ class SwitchManager:
     def precompute(self, request_id: int, dst: int, tokens, length: int,
                    max_len: int):
         """Prefill request context on the destination SSM (issued during
-        source-SSM idle time; JAX async dispatch overlaps it)."""
+        source-SSM idle time; JAX async dispatch overlaps it).  ``max_len``
+        is the cache width to build — pool max_len for dense pools, a
+        bucketed O(context) width for paged ones (the engine adds a
+        gamma+1 growth margin so the common next-slot switch still hits)."""
         b = self.ssms[dst]
         toks = self._padded(tokens, length)
         lengths = jnp.asarray([length], jnp.int32)
         _, cache = b.prefill(toks, lengths, max_len)
         self.pre[request_id] = PrecomputedKV(
-            ssm_idx=dst, upto_length=length, cache=cache, lengths=lengths)
+            ssm_idx=dst, upto_length=length, cache=cache, lengths=lengths,
+            width=max_len)
 
     def switch(self, request_id: int, dst: int, tokens, length: int,
                max_len: int) -> Tuple[object, int]:
         """Returns (cache_on_dst, tokens_recomputed_synchronously)."""
         pre = self.pre.pop(request_id, None)
+        if (pre is not None and pre.ssm_idx == dst
+                and pre.width and length > pre.width):
+            # context outgrew the precomputed grid (bucketed paged width):
+            # catch-up writes would fall off the cache — treat as a miss
+            pre = None
         if pre is not None and pre.ssm_idx == dst:
             self.hits += 1
             delta = length - pre.upto_length

@@ -45,11 +45,20 @@ class Request:
     prompt: np.ndarray          # (P,) int32
     max_new: int
     arrival: float = 0.0        # sim-clock arrival timestamp (serving)
+    # scheduling class: lower value = more urgent (nice-level semantics).
+    # The default 0 everywhere reproduces plain FIFO-by-arrival exactly.
+    priority: int = 0
     # runtime state
     emitted: Optional[List[int]] = None
     done: bool = False
     preemptions: int = 0
     finish_time: Optional[float] = None
+    # chunked prefill: context tokens already ingested into the KV pool
+    # (reset to 0 on preemption — partial prefill is discarded with the
+    # freed blocks)
+    prefill_pos: int = 0
+    # sim-clock time the first output token was committed (TTFT source)
+    first_token_time: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:

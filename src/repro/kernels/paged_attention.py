@@ -24,6 +24,14 @@ live blocks of the batch, never the free pool and never padding up to a
   ``block_owner`` carries the owning request's segment id per block, so a
   whole KV tile is skipped when its owner cannot match the query tile.
 
+  **Chunked prefill reuses this kernel.**  A prompt chunk is a span of
+  queries at positions ``pos..pos+n-1`` attending the owning row's prior
+  context blocks plus itself causally — exactly the verify shape with the
+  chunk's tokens as the query segment (q_pos = chunk positions, block
+  list = the row's blocks).  The serving engine's XLA path goes through
+  the same formulation (serving/paged.decode_step_paged with a (1, nb)
+  row table); no dedicated chunk-prefill kernel exists on purpose.
+
 Block sizing: one KV tile is (block_size, Kh, D).  With block_size=128,
 Kh=8, D=128 bf16 that is 512 KiB/tile — comfortably double-buffered in
 16 MiB VMEM; block_size=16 remains correct (CPU/test shapes) but

@@ -95,9 +95,22 @@ def main(argv=None):
                     help="KV cells per physical block (paged layout); "
                          "128 matches TPU tile granularity at full scale, "
                          "16 keeps reduced CPU runs snappy")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: max prompt tokens ingested per "
+                         "request per slot, interleaved with decode "
+                         "(Sarathi-style); 0 = monolithic prefill-on-admit")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-slot LLM query-token budget shared between "
+                         "decode slots (gamma+1 tokens each) and prefill "
+                         "chunks; default: unthrottled")
     args = ap.parse_args(argv)
     if args.block_size <= 0:
         ap.error("--block-size must be positive")
+    if args.prefill_chunk < 0:
+        ap.error("--prefill-chunk must be >= 0 (0 disables chunking)")
+    if args.token_budget is not None and args.token_budget <= 0:
+        ap.error("--token-budget must be positive (omit it for "
+                 "unthrottled slots)")
     if args.arrival_rate is not None and args.arrival_rate <= 0:
         ap.error("--arrival-rate must be positive (omit it for "
                  "all-at-t=0 arrivals)")
@@ -119,7 +132,9 @@ def main(argv=None):
                         scheduler_policy=args.scheduler,
                         kv_budget=args.kv_budget,
                         kv_layout=args.kv_layout,
-                        block_size=args.block_size)
+                        block_size=args.block_size,
+                        prefill_chunk=args.prefill_chunk,
+                        token_budget=args.token_budget)
     eng = SpinEngine(llm, ssms, sel, ecfg)
     eng.add_requests(reqs)
     stats = eng.run(max_slots=args.max_slots)

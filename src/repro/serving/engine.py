@@ -2,10 +2,16 @@
 
 Per time slot:
   0. the continuous-batching scheduler (serving/scheduler.py) admits
-     arrived requests into free pool rows (prefill-on-admit; under the
-     default paged layout admission allocates exactly the prompt's KV
-     blocks and the budget is enforced as physical blocks) and preempts
-     lowest-priority requests when the KV budget is exceeded;
+     arrived requests into free pool rows and preempts lowest-priority
+     requests when the KV budget is exceeded.  With ``prefill_chunk=0``
+     admission prefills the whole prompt monolithically; with
+     ``prefill_chunk>0`` the scheduler's token-budget step planner grants
+     prompt *chunks* instead — an admitted request holds a row in the
+     ``prefilling`` state (partial KV, not drafting) and its chunks are
+     appended into the existing row/block table while other slots keep
+     decoding in the same step (Sarathi-style mixed batches; under the
+     paged layout a chunk allocates exactly its blocks and writes through
+     the row's block table);
   1. the selector assigns each active request to an SSM (LBSS / baselines);
      switches go through the SwitchManager (fast pre-computed switching);
   2. every SSM drafts gamma candidates for its batch (static-shape pools);
@@ -59,8 +65,11 @@ def _bucket(n: int, align: int = 16) -> int:
     return max(align, int(math.ceil(n / align) * align))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(kw_only=True)
 class EngineConfig:
+    """Keyword-only on purpose (like ``SchedulerConfig``): fields are
+    appended as the engine grows and positional construction would
+    silently shift arguments."""
     gamma: int = 4
     max_len: int = 256
     capacity: int = 16                 # concurrent requests (LLM pool rows)
@@ -82,6 +91,15 @@ class EngineConfig:
     # windows fall back to dense automatically.
     kv_layout: str = "paged"
     block_size: int = 16
+    # chunked prefill: max prompt tokens ingested per request per slot
+    # (0 = monolithic prefill-on-admit).  Continuous policy +
+    # attention-family LLM only — recurrent-state LLMs fall back to
+    # monolithic automatically (their state updates are not
+    # segment-maskable, so bucket-padded chunk appends would corrupt them).
+    prefill_chunk: int = 0
+    # per-slot LLM query-token budget split between decode slots
+    # (gamma+1 tokens each) and prefill chunks; None = unthrottled
+    token_budget: Optional[int] = None
 
 
 class SpinEngine:
@@ -135,19 +153,35 @@ class SpinEngine:
         self.failed_ssms: set = set()
         self.requests: Dict[int, Request] = {}
         self.assignment: Dict[int, int] = {}
+        # chunked prefill relies on segment-maskable KV appends; recurrent
+        # state advances on every token and cannot mask bucket padding, so
+        # those models keep monolithic admission (mirrors the paged->dense
+        # auto-fallback).
+        self.chunked = (ecfg.prefill_chunk > 0
+                        and ecfg.scheduler_policy == "continuous"
+                        and not llm.has_recurrent_state)
         self.scheduler = ContinuousScheduler(SchedulerConfig(
             capacity=ecfg.capacity, max_len=self.max_len, gamma=ecfg.gamma,
             kv_budget=sched_budget, policy=ecfg.scheduler_policy,
-            block_size=ecfg.block_size if self.paged else 0))
+            block_size=ecfg.block_size if self.paged else 0,
+            prefill_chunk=ecfg.prefill_chunk if self.chunked else 0,
+            token_budget=ecfg.token_budget))
         self.rng = jax.random.PRNGKey(ecfg.seed)
         # metrics
         self.sim_time = 0.0
         self.wall_time = 0.0
         self.accepted_tokens = 0
         self.total_drafted = 0
+        self.prefill_tokens_total = 0
         self.slot_log: List[dict] = []
         self.straggler_redispatches = 0
         self._accept_by_req: Dict[int, List[float]] = {}
+        # prefill work issued since the last slot simulation (monolithic
+        # admissions and chunk appends); consumed into the next slot's
+        # makespan so prompt ingestion is paid for on the sim clock
+        self._prefill_tokens_pending = 0
+        self._prefill_cells_pending = 0.0
+        self._unstamped: set = set()       # rids awaiting first_token_time
 
     # ------------------------------------------------------------ admin --
     @property
@@ -173,27 +207,45 @@ class SpinEngine:
         self.scheduler.submit(reqs)
         self._schedule()
 
-    def _schedule(self):
+    def _schedule(self, grant_prefill: bool = False):
         """Ask the scheduler for this instant's decision and apply it:
-        preemptions release rows/KV first, then admissions prefill into
-        the freed rows."""
-        dec = self.scheduler.plan(self.sim_time)
+        preemptions release rows/KV first, then admissions take rows, then
+        prefill chunks are appended.  ``grant_prefill`` is True only for
+        the start-of-step pass so the chunk budget is spent once per slot
+        (end-of-step recycling and ``add_requests`` only move rows)."""
+        dec = self.scheduler.plan(self.sim_time,
+                                  grant_prefill=grant_prefill)
         for r in dec.preempt:
             self._preempt(r)
         for r in dec.admit:
-            self._admit_one(r)
+            if r.first_token_time is None:
+                self._unstamped.add(r.rid)
+            self._begin_admit(r)
+        for r, n in dec.prefill:
+            self._prefill_chunk(r, n)
 
-    def _admit_one(self, r: Request):
-        """Prefill-on-admit.  Fresh requests prefill their prompt; a
-        preempted request re-prefills prompt + committed tokens, so its
-        greedy continuation is bit-identical to an uninterrupted run.
-        On re-admission the last emitted token has not been fed back yet —
-        it becomes the pool's last_token, everything before it is
-        context."""
+    @staticmethod
+    def _context_tokens(r: Request) -> np.ndarray:
+        """Committed context to (re-)prefill: the prompt plus emitted
+        tokens except the last, which has not been fed back yet — it
+        becomes the pool's last_token."""
+        return np.concatenate([np.asarray(r.prompt, np.int64),
+                               np.asarray(r.emitted[:-1] if r.emitted
+                                          else [], np.int64)])
+
+    def _begin_admit(self, r: Request):
+        """Grant the request a pool row.  Monolithic mode prefills the
+        whole context here (fresh prompt, or prompt + committed tokens
+        after preemption — greedy continuation stays bit-identical to an
+        uninterrupted run).  Chunked mode only takes the row; context
+        arrives through :meth:`_prefill_chunk` grants."""
         self.requests[r.rid] = r
-        tokens = np.concatenate([np.asarray(r.prompt, np.int64),
-                                 np.asarray(r.emitted[:-1] if r.emitted
-                                            else [], np.int64)])
+        if self.chunked:
+            r.prefill_pos = 0
+            self.llm_pool.insert_empty(r.rid)
+            self.scheduler.mark_admitted(r, self.sim_time)
+            return
+        tokens = self._context_tokens(r)
         L = len(tokens)
         row = np.zeros((1, _bucket(L)), np.int32)
         row[0, :L] = tokens
@@ -203,14 +255,69 @@ class SpinEngine:
         plen = (self.llm_pool.prefill_len(row.shape[1]) if self.paged
                 else self.max_len)
         logits, cache = self.llm.prefill(jnp.asarray(row), lengths, plen)
-        if r.emitted:
-            last = int(r.emitted[-1])
-        else:
-            last = int(jnp.argmax(
-                logits[0, L - 1, :self.llm.cfg.vocab_size]))
-            r.emitted = [last]
+        last = self._first_token(r, logits, L - 1)
         self.llm_pool.insert(r.rid, cache, L, last)
+        self._account_prefill(0, L)
         self.scheduler.mark_admitted(r, self.sim_time)
+
+    def _first_token(self, r: Request, logits, idx: int) -> int:
+        """The token that follows the ingested context — the emitted tail
+        on re-admission, else the greedy pick at the last context
+        position.  Shared by the monolithic and final-chunk paths so the
+        bit-exactness contract between them cannot drift."""
+        if r.emitted:
+            return int(r.emitted[-1])
+        last = int(jnp.argmax(logits[0, idx, :self.llm.cfg.vocab_size]))
+        r.emitted = [last]
+        return last
+
+    def _account_prefill(self, pos: int, n: int):
+        """Record prefill work for the next slot simulation: n query
+        tokens starting at context offset pos, attending Σ (pos+i+1)
+        KV cells — same affine terms as verification."""
+        self._prefill_tokens_pending += n
+        self._prefill_cells_pending += n * pos + n * (n + 1) / 2.0
+
+    def _prefill_chunk(self, r: Request, n: int):
+        """Append one prompt chunk into the request's existing row.  The
+        chunk's queries attend the prior context plus themselves causally
+        (decode-path forward), so the final logits — and therefore the
+        first emitted token and the greedy continuation — are the
+        monolithic prefill's.  Bucket padding carries segment -1: its KV
+        writes land invalidated and one trace serves each width bucket."""
+        rid = r.rid
+        ctx = self._context_tokens(r)
+        L = len(ctx)
+        pos = r.prefill_pos
+        n = min(n, L - pos)
+        if n <= 0:
+            return
+        Tb = _bucket(n, 8)
+        toks = np.zeros((1, Tb), np.int32)
+        toks[0, :n] = ctx[pos:pos + n]
+        segs = np.full((1, Tb), -1, np.int32)
+        segs[0, :n] = 0
+        lengths = jnp.asarray([pos], jnp.int32)
+        if self.paged:
+            self.llm_pool.ensure(rid, pos + n)
+            bt = self.llm_pool.row_table(rid)
+            logits, cache = self.llm.append_paged(
+                self.llm_pool.cache, jnp.asarray(toks), lengths,
+                jnp.asarray(segs), bt)
+            self.llm_pool.cache = cache
+        else:
+            one = self.llm_pool.row_cache(rid)
+            logits, one = self.llm.append(one, jnp.asarray(toks), lengths,
+                                          jnp.asarray(segs))
+            self.llm_pool.write_row(rid, one)
+        r.prefill_pos = pos + n
+        row = self.llm_pool.row_of[rid]
+        self.llm_pool.lengths[row] = r.prefill_pos
+        self._account_prefill(pos, n)
+        if r.prefill_pos >= L:
+            self.llm_pool.last_token[row] = self._first_token(r, logits,
+                                                              n - 1)
+            self.scheduler.mark_prefill_done(r)
 
     def _preempt(self, r: Request):
         """Release the request's row and draft-pool slot; generated tokens
@@ -246,22 +353,62 @@ class SpinEngine:
 
     # --------------------------------------------------------- one slot --
     def _active(self) -> List[Request]:
+        """Decode-ready requests: own a row AND are fully prefilled —
+        prefilling rows hold partial KV and must not draft or verify."""
+        pre = self.scheduler.prefilling
         return [r for r in self.requests.values()
-                if not r.done and self.llm_pool.has(r.rid)]
+                if not r.done and self.llm_pool.has(r.rid)
+                and r.rid not in pre]
+
+    def _consume_prefill(self):
+        """(time, tokens) of prefill work issued since the last slot
+        simulation; resets the pending counters."""
+        toks = self._prefill_tokens_pending
+        t = self.cost.prefill_time(toks, self._prefill_cells_pending)
+        self.prefill_tokens_total += toks
+        self._prefill_tokens_pending = 0
+        self._prefill_cells_pending = 0.0
+        return t, toks
+
+    def _stamp_first_tokens(self):
+        """TTFT: a request's first token exists once its (monolithic or
+        final-chunk) prefill has been paid for on the sim clock — i.e. at
+        the end of the slot that carried the work.  Only requests not yet
+        stamped are scanned, so the per-slot cost tracks new first tokens
+        rather than total stream history."""
+        for rid in list(self._unstamped):
+            r = self.requests[rid]
+            if r.emitted:
+                r.first_token_time = self.sim_time
+                self._unstamped.discard(rid)
 
     def step(self) -> dict:
         t_wall = time.perf_counter()
-        self._schedule()
+        self._schedule(grant_prefill=True)
         active = self._active()
         if not active:
             nxt = self.scheduler.next_arrival()
-            if nxt is not None:
+            if nxt is not None and not self.scheduler.running:
                 # pool drained: fast-forward the sim clock to the next
                 # arrival and admit it
                 self.sim_time = max(self.sim_time, nxt)
-                self._schedule()
+                self._schedule(grant_prefill=True)
                 active = self._active()
         if not active:
+            if self._prefill_tokens_pending > 0:
+                # prefill-only slot: every row is still ingesting context;
+                # the clock advances by the chunk work just issued
+                pre_t, pre_n = self._consume_prefill()
+                self.sim_time += pre_t
+                self._stamp_first_tokens()
+                self.wall_time += time.perf_counter() - t_wall
+                rec = {"tokens": 0, "sim_time": pre_t, "llm_idle": 0.0,
+                       "micro_batches": [], "active": 0,
+                       "running": len(self.scheduler.running),
+                       "queued": len(self.scheduler.waiting),
+                       "prefill_tokens": pre_n}
+                self.slot_log.append(rec)
+                return rec
             return {"done": True}
         ids = [r.rid for r in active]
         if self.paged:
@@ -320,7 +467,12 @@ class SpinEngine:
                 kv_cells_per_req=kv_cells_per_req)[0]
         else:
             mb = [1] * len(self.ssms)
-        slot = self._simulate_slot(per_ssm_batch, mb, kv_cells_per_req)
+        # mixed slot: chunk-prefill work issued this step (and monolithic
+        # admissions since the last slot) occupies the LLM ahead of the
+        # verify queue while SSMs draft concurrently
+        pre_t, pre_n = self._consume_prefill()
+        slot = self._simulate_slot(per_ssm_batch, mb, kv_cells_per_req,
+                                   prefill_time=pre_t)
 
         # commit tokens, update request state, observe goodput
         self.sim_time += slot.makespan
@@ -337,6 +489,7 @@ class SpinEngine:
             if len(r.emitted) - 1 >= r.max_new:
                 self._finish(r)
         self.accepted_tokens += slot_tokens
+        self._stamp_first_tokens()
         self.wall_time += time.perf_counter() - t_wall
 
         # fast-switching prediction for next slot (§IV-C)
@@ -349,18 +502,29 @@ class SpinEngine:
                "llm_idle": slot.llm_idle_frac, "micro_batches": mb,
                "active": len(ids),
                "running": len(self.scheduler.running),
-               "queued": len(self.scheduler.waiting)}
+               "queued": len(self.scheduler.waiting),
+               "prefill_tokens": pre_n}
         self.slot_log.append(rec)
         return rec
 
     # ---------------------------------------------------------- internals --
+    def _switch_width(self, j: int, length: int) -> int:
+        """Cache width for switch prefills/precomputes on SSM j.  Paged
+        pools only need the context's blocks (plus a gamma+1 growth margin
+        so a next-slot switch still hits) — O(context), not the
+        capacity-proportional max_len the dense layout requires."""
+        if not self.paged:
+            return self.max_len
+        need = min(self.max_len, length + self.ecfg.gamma + 1)
+        return self.ssm_pools[j].prefill_len(_bucket(need))
+
     def _place_on_ssm(self, rid: int, j: int):
         r = self.requests[rid]
         tokens = np.concatenate([np.asarray(r.prompt),
                                  np.asarray(r.emitted[:-1], np.int64)])
         length = len(tokens)
         cache, _ = self.switcher.switch(rid, j, tokens, length,
-                                        self.max_len)
+                                        self._switch_width(j, length))
         pool = self.ssm_pools[j]
         while not pool.can_admit(length):
             # evict someone not assigned here this slot (frees the row
@@ -383,7 +547,7 @@ class SpinEngine:
             tokens = np.concatenate([np.asarray(r.prompt),
                                      np.asarray(r.emitted[:-1], np.int64)])
             self.switcher.precompute(rid, dst, tokens, len(tokens),
-                                     self.max_len)
+                                     self._switch_width(dst, len(tokens)))
 
     def _draft_pool(self, j: int) -> np.ndarray:
         """Draft gamma tokens for every row of SSM j's pool; returns
@@ -461,6 +625,29 @@ class SpinEngine:
             self.llm_pool.invalidate_rows(
                 [row for row in range(N)
                  if row not in self.llm_pool.row_of.values()])
+        # prefilling rows are live pool rows but take no part in this
+        # verify: the full-pool forward still wrote speculative KV at
+        # their positions [len, len+gamma+1) — scrub all of it, or a later
+        # chunk landing below those positions would leave stale
+        # attendable garbage beyond the context
+        pre_rows = [self.llm_pool.row_of[rid]
+                    for rid in self.scheduler.prefilling
+                    if rid in self.llm_pool.row_of]
+        if pre_rows:
+            lo = np.zeros(N, np.int64)
+            hi = np.zeros(N, np.int64)
+            lens_now = np.asarray(self.llm_pool.lengths, np.int64)
+            for row in pre_rows:
+                lo[row] = lens_now[row]
+                hi[row] = lens_now[row] + gamma + 1
+            if self.paged:
+                self.llm_pool.invalidate_span(
+                    jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
+                    W=gamma + 1)
+            else:
+                self.llm_pool.cache = sd.invalidate_slots_jit(
+                    self.llm_pool.cache, jnp.asarray(lo, jnp.int32),
+                    jnp.asarray(hi, jnp.int32))
 
         # per-SSM catch-up (fill c_gamma hole) + rollback on draft pools
         for j, pool in enumerate(self.ssm_pools):
@@ -595,12 +782,13 @@ class SpinEngine:
             rates.append(float(np.mean(vals)) if vals else 0.5)
         return rates
 
-    def _simulate_slot(self, per_ssm_batch, mb,
-                       kv_cells_per_req=0.0) -> P.SimResult:
+    def _simulate_slot(self, per_ssm_batch, mb, kv_cells_per_req=0.0,
+                       prefill_time: float = 0.0) -> P.SimResult:
         cost = self.cost
         if self.ecfg.straggler_mitigation:
             cost = self._with_straggler_mitigation(cost, per_ssm_batch)
-        return P.simulate(cost, per_ssm_batch, mb, kv_cells_per_req)
+        return P.simulate(cost, per_ssm_batch, mb, kv_cells_per_req,
+                          prefill_time=prefill_time)
 
     def _with_straggler_mitigation(self, cost, per_ssm_batch):
         """Inject random stragglers; mitigation re-dispatches the straggling
@@ -631,13 +819,21 @@ class SpinEngine:
     def stats(self) -> dict:
         lat = [r.latency for r in self.requests.values()
                if r.latency is not None]
+        ttft = [r.first_token_time - r.arrival
+                for r in self.requests.values()
+                if r.first_token_time is not None]
         return {
             "kv_layout": "paged" if self.paged else "dense",
             "kv_blocks": (self.llm_pool.num_blocks if self.paged else None),
+            "prefill_chunk": (self.ecfg.prefill_chunk if self.chunked
+                              else 0),
             "accepted_tokens": self.accepted_tokens,
+            "prefill_tokens": self.prefill_tokens_total,
             "sim_time": self.sim_time,
             "wall_time": self.wall_time,
             "goodput_sim": self.accepted_tokens / max(self.sim_time, 1e-9),
+            "ttft_p50": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "ttft_p95": float(np.percentile(ttft, 95)) if ttft else 0.0,
             "drafted": self.total_drafted,
             "switch": self.switcher.stats,
             "scheduler": self.scheduler.stats,

@@ -159,13 +159,24 @@ def make_paged_verify_override(q_rows, block_tables, block_ids, block_owner,
 # ------------------------------------------------------- model entrypoints --
 
 def decode_step_paged(params, cfg, cache, *, tokens, lengths, block_tables,
-                      opts: T.Opts = T.Opts()):
+                      segments=None, opts: T.Opts = T.Opts()):
     """Paged analogue of ``transformer.decode_step``: T new tokens per row,
-    K/V written to / read from the rows' block tables."""
+    K/V written to / read from the rows' block tables.
+
+    ``segments`` (optional, (B, T)) marks padding query tokens with -1:
+    their KV writes land seg-invalidated (never attendable) and their
+    outputs are masked garbage the caller ignores.  This is how **chunked
+    prefill** appends a prompt chunk into an existing block table — a
+    (1, chunk) call whose queries attend the row's prior context blocks
+    plus themselves causally.  It is the same query-segment-over-prefix
+    shape as packed verification, so the TPU hot path reuses
+    ``kernels.paged_attention.paged_verify_attention`` (q_pos = chunk
+    positions, owner = the row's blocks) instead of a dedicated
+    chunk-prefill kernel."""
     num_blocks, bs = pool_dims(cache)
     override = make_paged_decode_override(block_tables, num_blocks, bs)
     return T.decode_step(params, cfg, cache, tokens=tokens, lengths=lengths,
-                         opts=opts, attn_override=override)
+                         segments=segments, opts=opts, attn_override=override)
 
 
 def verify_step_paged(params, cfg, cache, *, tokens, positions, segments,

@@ -60,6 +60,23 @@ def _row_set(pool_tree, row: int, one_tree):
     return out
 
 
+def _row_get(pool_tree, row: int):
+    """Gather pool row `row` into a batch-1 cache (the inverse of
+    ``_row_set``).  `row` is traced — one jitted trace serves every row.
+    Used by the chunked-prefill append path: the engine runs a chunk's
+    decode over the gathered row and scatters the result back."""
+    def go(leaf, axis):
+        idx = [slice(None)] * leaf.ndim
+        idx[axis] = row
+        return jnp.expand_dims(leaf[tuple(idx)], axis)
+
+    out = {}
+    for key, sub in pool_tree.items():
+        axis = 1 if key == "scan" else 0
+        out[key] = jax.tree.map(lambda l: go(l, axis), sub)
+    return out
+
+
 def _rows_invalidate(pool_tree, rows):
     """Mark attention slots of the given rows empty (seg=-1).  ``rows`` is
     a *traced* int array — one jitted trace serves every eviction batch;
@@ -99,6 +116,7 @@ class DenseCachePool:
         self.row_of: Dict[int, int] = {}
         self._free = list(range(capacity))
         self._row_set = jax.jit(_row_set)   # row is traced: no per-row retrace
+        self._row_gather = jax.jit(_row_get)
         self._rows_inval = jax.jit(_rows_invalidate)
 
     def has(self, rid: int) -> bool:
@@ -118,6 +136,24 @@ class DenseCachePool:
         self.lengths[row] = length
         self.last_token[row] = last_token
         return row
+
+    def insert_empty(self, rid: int) -> int:
+        """Grant a row with no KV yet (chunked prefill: context arrives in
+        append-chunk writes).  The row's slots are already seg-invalidated
+        (fresh pool init / ``evict``), so nothing stale is attendable."""
+        row = self._free.pop()
+        self.row_of[rid] = row
+        self.lengths[row] = 0
+        self.last_token[row] = 0
+        return row
+
+    def row_cache(self, rid: int):
+        """Batch-1 view of the request's row (gather, O(max_len))."""
+        return self._row_gather(self.cache, self.row_of[rid])
+
+    def write_row(self, rid: int, one_cache):
+        """Scatter an updated batch-1 row back (append-chunk commit)."""
+        self.cache = self._row_set(self.cache, self.row_of[rid], one_cache)
 
     def invalidate_rows(self, rows: List[int]):
         """Batched row invalidation: ONE jitted call for any number of rows
@@ -333,6 +369,24 @@ class PagedCachePool:
         self.lengths[row] = length
         self.last_token[row] = last_token
         return row
+
+    def insert_empty(self, rid: int) -> int:
+        """Grant a row that owns no blocks yet (chunked prefill: blocks are
+        allocated chunk-by-chunk via ``ensure`` as context is appended)."""
+        row = self._free_rows.pop()
+        self.row_of[rid] = row
+        self._nb[row] = 0
+        self.lengths[row] = 0
+        self.last_token[row] = 0
+        return row
+
+    def row_table(self, rid: int) -> jnp.ndarray:
+        """(1, nb) block table of one row, power-of-two bucketed, for
+        append-chunk writes through the paged decode override — chunk
+        queries attend exactly this row's live blocks."""
+        row = self.row_of[rid]
+        nb = min(self.blocks_per_row, _pow2(max(1, int(self._nb[row]))))
+        return jnp.asarray(self._table[row:row + 1, :nb])
 
     def ensure(self, rid: int, need_len: int):
         """Append blocks until the row covers ``need_len`` cells (the

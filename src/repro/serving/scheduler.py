@@ -8,27 +8,47 @@ paper's mechanisms buy — SpecInfer / SpecServe-style systems integrate
 speculative decoding with a continuous-batching scheduler for this reason.
 
 This module is the policy half of that scheduler; ``serving/engine.py``
-owns the mechanics (prefill-on-admit, cache eviction).  Per time slot the
-engine calls :meth:`ContinuousScheduler.plan` with the current simulated
-clock and applies the returned decision:
+owns the mechanics (prefill, cache eviction).  Per time slot the engine
+calls :meth:`ContinuousScheduler.plan` with the current simulated clock and
+applies the returned decision:
 
 * **arrivals** — submitted requests carry an ``arrival`` timestamp
   (Poisson or trace-driven, see ``data/workloads.py``); they become
   admissible only once the engine clock reaches it.
-* **admission** — waiting requests are admitted FIFO-by-arrival into free
-  ``CachePool`` rows, at slot granularity (prefill happens on admit).
+* **admission** — waiting requests are admitted by rank
+  ``(priority, arrival, rid)`` into free ``CachePool`` rows (default
+  priority 0 for every request reproduces plain FIFO-by-arrival exactly;
+  a lower priority value = more urgent, like a nice level).
+* **chunked prefill** (``prefill_chunk > 0``) — an admitted request does
+  not prefill its whole prompt in one monolithic pass.  It enters a
+  ``prefilling`` lifecycle state (owns a row, holds partial KV, does not
+  draft yet) and :meth:`plan` grants it prompt *chunks* under a per-slot
+  **token budget** that is shared with decode work: each decode-active
+  request costs ``gamma + 1`` LLM query tokens, and whatever remains of
+  ``token_budget`` is handed to prefilling requests in rank order, at most
+  ``prefill_chunk`` tokens each (Sarathi-style mixed batches).  With
+  ``prefill_chunk == 0`` (default) admission prefills monolithically as
+  before.
 * **recycling** — rows of finished requests are freed inside the engine
   step; the end-of-step ``plan`` immediately re-fills them, so a row never
   idles across a slot boundary while work is queued.
 * **preemption** — when the projected KV demand of the running set exceeds
-  ``kv_budget`` cells, the lowest-priority (latest-arrived) requests are
-  evicted and re-enqueued for re-prefill.  At least ``min_running``
+  ``kv_budget`` cells, victims are chosen lowest-priority-first (ties by
+  latest arrival) and re-enqueued for re-prefill.  At least ``min_running``
   requests always keep their rows, and an empty pool always admits, so the
   engine can never deadlock at full capacity.
 
+Progress guarantees with chunking: a preempted prefilling request loses
+its partial KV (blocks are freed) and restarts from chunk zero on
+re-admission; the oldest ``min_running`` row owners are never preempted,
+and when no request is decode-active the top-ranked prefilling request is
+always granted a chunk even if ``token_budget`` would deny it — the
+chunked analogue of the empty-pool admission rule, without which an idle
+step would make no progress at all.
+
 The ``static`` policy reproduces the seed behaviour (admit a cohort only
-when the pool has fully drained) and is kept as the baseline that
-``benchmarks/bench_serving.py`` compares against.
+when the pool has fully drained, monolithic prefill) and is kept as the
+baseline that ``benchmarks/bench_serving.py`` compares against.
 """
 
 from __future__ import annotations
@@ -36,15 +56,18 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.data.workloads import Request
 
 POLICIES = ("continuous", "static")
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(kw_only=True)
 class SchedulerConfig:
+    """Keyword-only on purpose: fields are appended as the scheduler grows
+    (chunking, priorities) and positional construction would silently shift
+    arguments."""
     capacity: int                      # LLM pool rows
     max_len: int = 256
     gamma: int = 4                     # speculation window (KV headroom)
@@ -55,38 +78,66 @@ class SchedulerConfig:
     # in block-rounded cells and the budget is the physical block pool —
     # an enforced invariant, not a model.  0 = cell-granular (dense layout).
     block_size: int = 0
+    # chunked prefill (continuous policy only): max prompt tokens ingested
+    # per request per slot.  0 = monolithic prefill-on-admit.
+    prefill_chunk: int = 0
+    # per-slot LLM query-token budget shared between decode slots
+    # (gamma+1 tokens each) and prefill chunks.  None = decode always
+    # proceeds and every prefilling request gets a full chunk.
+    token_budget: Optional[int] = None
 
 
 @dataclasses.dataclass
 class Decision:
     """One slot's scheduling decision, applied by the engine in order:
-    preemptions first (rows + KV cells freed), then admissions."""
+    preemptions first (rows + KV cells freed), then admissions (row
+    granted; prefill starts), then prefill chunk grants
+    ``(request, n_tokens)`` — newly admitted requests appear in both
+    ``admit`` and ``prefill`` when chunking is enabled."""
     admit: List[Request]
     preempt: List[Request]
+    prefill: List[Tuple[Request, int]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def empty(self) -> bool:
-        return not (self.admit or self.preempt)
+        return not (self.admit or self.preempt or self.prefill)
+
+
+def _rank(r: Request):
+    """Admission / victim ranking: lower priority value first (more
+    urgent), then FIFO by arrival.  Default priority 0 everywhere makes
+    this exactly the pre-priority FIFO order."""
+    return (r.priority, r.arrival, r.rid)
 
 
 class ContinuousScheduler:
     """Tracks the request lifecycle: pending (future arrival) -> waiting
-    (arrived, no row) -> running (owns a CachePool row) -> finished;
-    preemption moves running -> waiting with generated tokens intact."""
+    (arrived, no row) -> [prefilling (owns a row, partial KV) ->] running
+    (row + full context, drafting) -> finished; preemption moves
+    prefilling/running -> waiting with generated tokens intact (partial
+    prefill progress is discarded — its blocks are freed)."""
 
     def __init__(self, cfg: SchedulerConfig):
         if cfg.policy not in POLICIES:
             raise ValueError(f"unknown policy {cfg.policy!r}")
+        if cfg.prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0")
+        if cfg.token_budget is not None and cfg.token_budget <= 0:
+            raise ValueError("token_budget must be positive")
         self.cfg = cfg
         self.kv_budget = (cfg.kv_budget if cfg.kv_budget is not None
                           else cfg.capacity * cfg.max_len)
         self._pending: List = []           # heap of (arrival, seq, Request)
         self._seq = 0
-        self.waiting: List[Request] = []   # arrived, FIFO by (arrival, seq)
-        self.running: Dict[int, Request] = {}
+        self.waiting: List[Request] = []   # arrived, sorted by _rank
+        self.running: Dict[int, Request] = {}   # every row owner
+        self.prefilling: Dict[int, Request] = {}  # subset of running
         self.finished: List[int] = []
         self.preemptions = 0
         self.admissions = 0
+        self.prefill_grants = 0            # chunk grants issued
+        self.prefill_tokens = 0            # prompt tokens granted in chunks
         self._wait_since: Dict[int, float] = {}   # rid -> enqueue clock
         self.queue_wait = 0.0              # total waiting-time accumulated
 
@@ -99,11 +150,14 @@ class ContinuousScheduler:
 
     def poll(self, now: float):
         """Move every request whose arrival time has passed into the
-        waiting queue."""
+        waiting queue (kept sorted by rank)."""
         while self._pending and self._pending[0][0] <= now + 1e-12:
             arrival, _, r = heapq.heappop(self._pending)
-            self.waiting.append(r)
-            self._wait_since[r.rid] = max(now, arrival)
+            bisect.insort(self.waiting, r, key=_rank)
+            # queue wait starts at the actual arrival, not the first poll
+            # that noticed it — several requests landing inside one slot
+            # must each be charged their own wait
+            self._wait_since[r.rid] = arrival
 
     @property
     def outstanding(self) -> bool:
@@ -117,7 +171,11 @@ class ContinuousScheduler:
         """KV cells the request needs for its next slot: committed context
         plus the speculation window (gamma drafts + 1 bonus token), rounded
         up to whole blocks under the paged layout (allocation granularity
-        = one block, so the rounded figure is what the pool will hold)."""
+        = one block, so the rounded figure is what the pool will hold).
+        Prefilling requests are accounted at their full target context —
+        admission reserves the whole prompt's worth of budget up front, so
+        chunked ingestion can never strand a half-prefilled request without
+        blocks."""
         ctx = r.prompt_len + max(0, len(r.emitted or []) - 1)
         need = ctx + self.cfg.gamma + 1
         if self.cfg.block_size > 0:
@@ -125,15 +183,28 @@ class ContinuousScheduler:
             need = -(-need // b) * b
         return need
 
-    def plan(self, now: float) -> Decision:
+    def prefill_target(self, r: Request) -> int:
+        """Context tokens the engine must ingest before the request can
+        draft: prompt plus committed tokens (minus the one emitted-but-not-
+        fed-back token that becomes the pool's last_token)."""
+        return r.prompt_len + max(0, len(r.emitted or []) - 1)
+
+    def plan(self, now: float, grant_prefill: bool = True) -> Decision:
+        """One slot's decision.  ``grant_prefill=False`` plans admissions
+        and preemptions only (used by the engine's end-of-step recycling
+        pass, so chunk budgets are spent once per slot, not once per
+        ``plan`` call)."""
         self.poll(now)
         if self.cfg.policy == "static":
             return self._plan_static()
-        return self._plan_continuous()
+        dec = self._plan_continuous()
+        if grant_prefill and self.cfg.prefill_chunk > 0:
+            dec.prefill = self._plan_chunks(dec)
+        return dec
 
     def _plan_static(self) -> Decision:
         """Seed-style gang scheduling: a new cohort is admitted only once
-        the pool has fully drained."""
+        the pool has fully drained (always monolithic prefill)."""
         admit: List[Request] = []
         if not self.running:
             while self.waiting and len(admit) < self.cfg.capacity:
@@ -144,17 +215,16 @@ class ContinuousScheduler:
         admit: List[Request] = []
         preempt: List[Request] = []
         # Preempt while projected demand exceeds the KV budget.  Victims
-        # are the lowest-priority = latest-arrived runners; the oldest
-        # min_running requests always keep their rows (guaranteed
-        # progress -> no livelock).
-        runners = sorted(self.running.values(),
-                         key=lambda r: (r.arrival, r.rid))
+        # are the worst-ranked runners — lowest priority class first, ties
+        # by latest arrival; the best-ranked min_running requests always
+        # keep their rows (guaranteed progress -> no livelock).
+        runners = sorted(self.running.values(), key=_rank)
         demand = sum(self.kv_need(r) for r in runners)
         while demand > self.kv_budget and len(runners) > self.cfg.min_running:
             victim = runners.pop()
             demand -= self.kv_need(victim)
             preempt.append(victim)
-        # Admit FIFO into freed/free rows while the budget allows.  An
+        # Admit by rank into freed/free rows while the budget allows.  An
         # empty pool admits unconditionally (a single oversized request
         # must still run, otherwise the queue deadlocks).
         occupied = len(self.running) - len(preempt)
@@ -168,22 +238,72 @@ class ContinuousScheduler:
             demand += self.kv_need(r)
         return Decision(admit=admit, preempt=preempt)
 
+    def _plan_chunks(self, dec: Decision) -> List[Tuple[Request, int]]:
+        """Split this slot's token budget between decode slots and prompt
+        chunks.  Decode comes first (every decode-active request costs
+        gamma+1 query tokens); the remainder goes to prefilling requests in
+        rank order, capped at ``prefill_chunk`` tokens each.  When nothing
+        is decode-active, the top-ranked prefilling request is granted a
+        chunk unconditionally — an otherwise-idle slot must make progress."""
+        victims = {r.rid for r in dec.preempt}
+        cands = sorted(
+            [r for rid, r in self.prefilling.items() if rid not in victims]
+            + list(dec.admit), key=_rank)
+        n_decode = (len(self.running) - len(victims)
+                    - sum(1 for rid in self.prefilling if rid not in victims))
+        left: Optional[int] = None
+        if self.cfg.token_budget is not None:
+            left = max(0, self.cfg.token_budget
+                       - n_decode * (self.cfg.gamma + 1))
+        grants: List[Tuple[Request, int]] = []
+        for r in cands:
+            remaining = self.prefill_target(r) - r.prefill_pos
+            if remaining <= 0:
+                continue
+            n = min(self.cfg.prefill_chunk, remaining)
+            if left is not None:
+                n = min(n, left)
+            if n <= 0:
+                if grants or n_decode > 0:
+                    break               # budget exhausted; decode advances
+                n = min(self.cfg.prefill_chunk, remaining)  # idle-slot rule
+            grants.append((r, n))
+            if left is not None:
+                left -= n
+            self.prefill_grants += 1
+            self.prefill_tokens += n
+        return grants
+
     # ------------------------------------------- engine acknowledgements --
     def mark_admitted(self, r: Request, now: float):
+        """The request owns a row.  Monolithic mode: it is immediately
+        decode-ready.  Chunked mode: it enters the prefilling state and
+        leaves it via :meth:`mark_prefill_done`."""
         self.running[r.rid] = r
         self.admissions += 1
+        if self.cfg.prefill_chunk > 0 and self.cfg.policy == "continuous":
+            r.prefill_pos = 0
+            self.prefilling[r.rid] = r
         since = self._wait_since.pop(r.rid, None)
         if since is not None:
             self.queue_wait += max(0.0, now - since)
 
+    def mark_prefill_done(self, r: Request):
+        """All context chunks ingested: prefilling -> running (drafting)."""
+        self.prefilling.pop(r.rid, None)
+
     def mark_preempted(self, r: Request, now: float):
         """Back to the waiting queue with emitted tokens intact; the engine
-        re-prefills prompt+emitted on re-admission.  Queue order stays
-        FIFO-by-arrival so a preempted old request outranks new arrivals."""
+        re-prefills prompt+emitted on re-admission.  Partial prefill
+        progress is discarded with the freed blocks.  Queue order stays
+        rank-FIFO so a preempted old request outranks newer arrivals of the
+        same priority class."""
         self.running.pop(r.rid, None)
+        self.prefilling.pop(r.rid, None)
+        r.prefill_pos = 0
         r.preemptions += 1
         self.preemptions += 1
-        bisect.insort(self.waiting, r, key=lambda x: (x.arrival, x.rid))
+        bisect.insort(self.waiting, r, key=_rank)
         self._wait_since[r.rid] = now
 
     def mark_finished(self, rid: int):
@@ -200,4 +320,7 @@ class ContinuousScheduler:
             "preemptions": self.preemptions,
             "finished": len(self.finished),
             "queue_wait": self.queue_wait,
+            "prefill_chunk": self.cfg.prefill_chunk,
+            "prefill_grants": self.prefill_grants,
+            "prefill_tokens": self.prefill_tokens,
         }

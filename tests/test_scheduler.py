@@ -18,10 +18,12 @@ from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
 VOCAB = 256
 
 
-def _req(rid, arrival=0.0, prompt_len=8, max_new=8, emitted=None):
+def _req(rid, arrival=0.0, prompt_len=8, max_new=8, emitted=None,
+         priority=0):
     return Request(rid=rid, dataset="cip", difficulty=0.5,
                    prompt=np.zeros(prompt_len, np.int32), max_new=max_new,
-                   arrival=arrival, emitted=list(emitted or []))
+                   arrival=arrival, priority=priority,
+                   emitted=list(emitted or []))
 
 
 # ------------------------------------------------------- policy (no jax) --
@@ -96,6 +98,49 @@ def test_oversized_request_admitted_into_empty_pool_no_deadlock():
     s.submit([_req(0, prompt_len=30)])
     dec = s.plan(0.0)
     assert [r.rid for r in dec.admit] == [0]
+
+
+def test_queue_wait_accumulates_across_preempt_readmit_cycles():
+    """queue_wait must count every stretch a request spends off a row:
+    initial arrival->admission PLUS each preemption->re-admission gap."""
+    s = ContinuousScheduler(SchedulerConfig(capacity=2, max_len=64, gamma=3))
+    r = _req(0, arrival=1.0)
+    s.submit([r])
+    dec = s.plan(3.0)                      # waited 1.0 -> 3.0 = 2.0
+    s.mark_admitted(dec.admit[0], 3.0)
+    assert s.queue_wait == pytest.approx(2.0)
+    s.mark_preempted(r, 5.0)               # off-row again at 5.0
+    dec = s.plan(9.0)
+    assert [x.rid for x in dec.admit] == [0]
+    s.mark_admitted(r, 9.0)                # +4.0 re-admission wait
+    assert s.queue_wait == pytest.approx(6.0)
+    s.mark_preempted(r, 10.0)
+    s.mark_admitted(r, 10.5)               # +0.5, third cycle
+    assert s.queue_wait == pytest.approx(6.5)
+
+
+def test_preempted_request_outranks_newer_arrivals_on_readmission():
+    """A preempted request re-enters the waiting queue at its original
+    rank (priority, arrival, rid), so it is re-admitted before requests
+    that arrived after it — preemption must not cost queue position."""
+    s = ContinuousScheduler(SchedulerConfig(capacity=1, max_len=64, gamma=3,
+                                            kv_budget=30))
+    old = _req(0, arrival=0.0, prompt_len=10)
+    s.submit([old])
+    dec = s.plan(0.0)
+    s.mark_admitted(dec.admit[0], 0.0)
+    s.submit([_req(1, arrival=1.0, prompt_len=8),
+              _req(2, arrival=2.0, prompt_len=8)])
+    s.mark_preempted(old, 3.0)             # rids 1, 2 already waiting
+    dec = s.plan(3.0)
+    assert [x.rid for x in dec.admit] == [0], "preempted oldest first"
+    s.mark_admitted(old, 3.0)
+    assert [x.rid for x in s.waiting] == [1, 2]
+    # a higher-priority late arrival still outranks the preempted request
+    s.mark_preempted(old, 4.0)
+    s.submit([_req(3, arrival=4.0, prompt_len=8, priority=-1)])
+    dec = s.plan(4.0)
+    assert [x.rid for x in dec.admit] == [3]
 
 
 def test_poisson_arrivals_monotone_and_rate_roughly_right():
