@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import SSM_NAMES, VOCAB, build_zoo
 from repro.core.pipeline import profile_cost_model

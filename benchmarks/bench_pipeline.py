@@ -6,12 +6,10 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
-from benchmarks.common import VOCAB, build_zoo
+from benchmarks.common import build_zoo
 from repro.core.pipeline import (choose_micro_batches, profile_cost_model,
                                  sweep_micro_batches)
-from repro.data.workloads import make_workload
 
 GAMMA = 4
 N_REQ = 16

@@ -21,7 +21,6 @@ import numpy as np
 
 from benchmarks.common import VOCAB, build_zoo
 from repro.core import decompose as D
-from repro.data.workloads import make_workload
 from repro.models import transformer as T
 
 GAMMA = 4

@@ -17,7 +17,6 @@ from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import spin_llama

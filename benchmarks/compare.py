@@ -1,0 +1,192 @@
+"""Bench-regression gate: compare a benchmark run against the committed
+baseline.
+
+``benchmarks/run.py`` writes one JSON record per emitted line
+(name / us / derived / section).  The ``derived`` strings carry the
+actual metrics as ``key=value`` pairs (``goodput=276.0tok/s``,
+``ttft_p95=12.3ms``, ``speedup=1.42x``, ...), produced by the calibrated
+event simulator — deterministic for a given seed, so they are comparable
+across machines.  Wall-clock ``us`` readings are machine-dependent and
+are reported but never gated.
+
+For every record name present in both files, each shared numeric metric
+is classified by key:
+
+* lower-is-better (latency-flavoured: ``ttft*``, ``stall*``, ``*latency``,
+  ``*_lat``, ``*wait``, ``us``) — regression = current > baseline * (1 +
+  tolerance);
+* higher-is-better (throughput-flavoured: ``goodput*``, ``speedup``,
+  ``reduction``, ``saving*``, ``accepted``, ``concurrency``, ...) —
+  regression = current < baseline * (1 - tolerance);
+* anything else is informational only.
+
+The gate also fails when a record that exists in the baseline is missing
+from the current run *for a section the current run claims to have run*
+— silently dropping a benchmark must not pass CI.  Exit status: 0 clean,
+1 regression(s), 2 usage/IO error.
+
+Refreshing the baseline after an intentional perf change::
+
+    PYTHONPATH=src python -m benchmarks.run \
+        --sections serving,paged,chunked,gamma \
+        --json-path results/BENCH_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+DEFAULT_BASELINE = "results/BENCH_baseline.json"
+DEFAULT_CURRENT = "results/BENCH_serving.json"
+
+_NUM = re.compile(r"([A-Za-z_][\w.]*)=(-?\d+(?:\.\d+)?(?:e-?\d+)?)")
+
+LOWER_BETTER = ("ttft", "stall", "latency", "lat", "wait", "us", "preempt")
+HIGHER_BETTER = (
+    "goodput",
+    "speedup",
+    "reduction",
+    "saving",
+    "accepted",
+    "concurrency",
+    "tokens_per",
+    "finished",
+)
+
+
+def parse_metrics(derived: str) -> dict:
+    """Numeric key=value pairs from a derived string; trailing unit text
+    after the number (``tok/s``, ``ms``, ``x``) is ignored by the regex."""
+    return {k: float(v) for k, v in _NUM.findall(derived)}
+
+
+def direction(key: str) -> int:
+    """-1 lower-is-better, +1 higher-is-better, 0 informational."""
+    k = key.lower()
+    if any(k.startswith(p) or k.endswith(p) for p in LOWER_BETTER):
+        return -1
+    if any(k.startswith(p) for p in HIGHER_BETTER):
+        return +1
+    return 0
+
+
+def load_records(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return data
+
+
+def compare(baseline: dict, current: dict, tolerance: float):
+    """Yields (section, name, key, base, cur, delta_frac, status) rows.
+    status: 'ok' | 'regressed' | 'missing' | 'info'."""
+    base_by_name = {r["name"]: r for r in baseline.get("records", [])}
+    cur_by_name = {r["name"]: r for r in current.get("records", [])}
+    sections_run = set(current.get("sections_run", []))
+    rows = []
+    for name, base_rec in sorted(base_by_name.items()):
+        section = base_rec.get("section", "")
+        if sections_run and section not in sections_run:
+            continue  # section not selected this run: nothing to gate
+        cur_rec = cur_by_name.get(name)
+        if cur_rec is None:
+            rows.append((section, name, "-", 0.0, 0.0, 0.0, "missing"))
+            continue
+        base_m = parse_metrics(base_rec.get("derived", ""))
+        cur_m = parse_metrics(cur_rec.get("derived", ""))
+        base_m["us"] = float(base_rec.get("us", 0.0))
+        cur_m["us"] = float(cur_rec.get("us", 0.0))
+        for key in sorted(base_m):
+            if key not in cur_m:
+                # a gated metric that vanished from the derived string is
+                # a silent drop, not a pass — same class as a missing
+                # record, one level down
+                if key != "us" and direction(key) != 0:
+                    rows.append(
+                        (section, name, key, base_m[key], 0.0, 0.0, "missing")
+                    )
+                continue
+            b, c = base_m[key], cur_m[key]
+            delta = (c - b) / abs(b) if b else 0.0
+            d = direction(key)
+            if key == "us" or d == 0:
+                status = "info"
+            elif d < 0 and c > b * (1.0 + tolerance) and c - b > 1e-9:
+                status = "regressed"
+            elif d > 0 and c < b * (1.0 - tolerance) and b - c > 1e-9:
+                status = "regressed"
+            else:
+                status = "ok"
+            rows.append((section, name, key, b, c, delta, status))
+    return rows
+
+
+def print_table(rows, tolerance: float) -> None:
+    header = (
+        f"{'section':<18} {'record':<44} {'metric':<14} "
+        f"{'baseline':>12} {'current':>12} {'delta':>8}  status"
+    )
+    print(header)
+    print("-" * len(header))
+    for section, name, key, b, c, delta, status in rows:
+        mark = {"regressed": "FAIL", "missing": "MISS", "info": "", "ok": ""}[status]
+        print(
+            f"{section[:18]:<18} {name[:44]:<44} {key[:14]:<14} "
+            f"{b:>12.3f} {c:>12.3f} {delta * 100:>+7.1f}%  {mark}"
+        )
+    print(
+        f"(tolerance: ±{tolerance * 100:.0f}% on gated metrics; "
+        "'us' and unclassified keys are informational)"
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "current",
+        nargs="?",
+        default=DEFAULT_CURRENT,
+        help="bench JSON produced by benchmarks.run",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=DEFAULT_BASELINE,
+        help="committed baseline JSON",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.30,
+        help="allowed relative slack on gated metrics "
+        "(default 0.30: sim metrics are deterministic "
+        "per seed but drift slightly across jax builds)",
+    )
+    args = ap.parse_args(argv)
+    if args.tolerance < 0:
+        ap.error("--tolerance must be >= 0")
+    try:
+        baseline = load_records(args.baseline)
+        current = load_records(args.current)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    rows = compare(baseline, current, args.tolerance)
+    print_table(rows, args.tolerance)
+    bad = [r for r in rows if r[6] in ("regressed", "missing")]
+    if bad:
+        print(f"\n{len(bad)} regression(s) vs {args.baseline}:")
+        for section, name, key, b, c, delta, status in bad:
+            if status == "missing":
+                print(f"  {name}: record missing from current run")
+            else:
+                print(f"  {name}: {key} {b:.3f} -> {c:.3f} ({delta * 100:+.1f}%)")
+        return 1
+    gated = sum(1 for r in rows if r[6] == "ok")
+    print(f"\nno regressions ({gated} gated comparisons clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,6 @@ import argparse
 import dataclasses
 import json
 
-import numpy as np
 
 from repro.launch import dryrun
 from repro.launch.specs import SHAPES

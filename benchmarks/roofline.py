@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun_baseline.json")

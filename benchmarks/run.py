@@ -33,7 +33,7 @@ def main(argv=None) -> None:
                     help="where to write the JSON record file")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_batching, bench_chunked,
+    from benchmarks import (bench_batching, bench_chunked, bench_gamma,
                             bench_heterogeneity, bench_overall, bench_paged,
                             bench_pipeline, bench_selector, bench_serving,
                             bench_verification, roofline)
@@ -58,6 +58,7 @@ def main(argv=None) -> None:
         ("serving scheduler", bench_serving.main),
         ("paged kv", bench_paged.main),
         ("chunked prefill", bench_chunked.main),
+        ("gamma depth", bench_gamma.main),
         ("roofline", roofline.main),
     ]
     if args.sections:

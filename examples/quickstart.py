@@ -9,7 +9,6 @@ LLM greedy decoding (losslessness) while needing far fewer LLM passes.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import registry
 from repro.core import spec_decode as sd

@@ -24,7 +24,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np

@@ -26,9 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -153,13 +152,28 @@ def make_attn_override(gather_b, gather_s, valid, q_rows):
     return override
 
 
-def build_query_layout(lengths: Sequence[int], gamma: int):
-    """Query tokens for verification: gamma+1 per request, positions
-    lengths[i]..lengths[i]+gamma, segment = request index.
+def build_query_layout(lengths: Sequence[int], gamma):
+    """Query tokens for verification: gamma_i+1 per request, positions
+    lengths[i]..lengths[i]+gamma_i, segment = request index.
+
+    ``gamma`` is either a scalar (uniform speculation depth — every
+    request contributes gamma+1 query tokens, the seed layout) or a
+    per-request sequence of draft depths (the goodput-aware gamma
+    controller grants ragged depths, so the packed query count is
+    Σ (k_i + 1) instead of n * (gamma + 1)).
     Returns (q_rows (Tq,), q_positions (1,Tq), q_segments (1,Tq))."""
     n = len(lengths)
-    q_rows = np.repeat(np.arange(n, dtype=np.int32), gamma + 1)
-    offs = np.tile(np.arange(gamma + 1, dtype=np.int32), n)
+    if np.ndim(gamma) == 0:
+        gam = np.full(n, int(gamma), np.int32)
+    else:
+        gam = np.asarray(gamma, np.int32)
+        if len(gam) != n:
+            raise ValueError(
+                f"per-request gamma has {len(gam)} entries for {n} requests")
+    q_rows = np.repeat(np.arange(n, dtype=np.int32), gam + 1)
+    offs = np.concatenate(
+        [np.arange(g + 1, dtype=np.int32) for g in gam]) if n else \
+        np.zeros(0, np.int32)
     q_pos = (np.asarray(lengths, np.int32)[q_rows] + offs)[None]
     q_seg = q_rows[None].astype(np.int32)
     return q_rows, q_pos, q_seg

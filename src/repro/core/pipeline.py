@@ -26,8 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import math
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -40,20 +39,30 @@ class CostModel:
     ssm_fixed: Sequence[float]               # per SSM: launch overhead
     llm_fixed: float                         # verification launch overhead
     llm_time_per_token: float                # sec per (gamma+1) query token
-    gamma: int = 4
+    gamma: int = 4                           # default draft depth per request
     llm_time_per_kv_cell: float = 0.0        # sec per attended KV cell
 
-    def draft_time(self, ssm: int, batch: int) -> float:
+    def draft_time(self, ssm: int, batch: int,
+                   tokens: Optional[float] = None) -> float:
+        """Draft latency for ``batch`` requests; ``tokens`` overrides the
+        total drafted-token count (per-request adaptive depths make it
+        != batch * gamma)."""
         if batch <= 0:
             return 0.0
-        return (self.ssm_fixed[ssm]
-                + self.ssm_time_per_token[ssm] * batch * self.gamma)
+        if tokens is None:
+            tokens = batch * self.gamma
+        return self.ssm_fixed[ssm] + self.ssm_time_per_token[ssm] * tokens
 
-    def verify_time(self, batch: int, kv_cells: float = 0.0) -> float:
+    def verify_time(self, batch: int, kv_cells: float = 0.0,
+                    q_tokens: Optional[float] = None) -> float:
+        """Verification latency; ``q_tokens`` overrides the LLM query-token
+        count (ragged depths: Σ (k_i + 1) instead of batch * (gamma+1))."""
         if batch <= 0:
             return 0.0
+        if q_tokens is None:
+            q_tokens = batch * (self.gamma + 1)
         return (self.llm_fixed
-                + self.llm_time_per_token * batch * (self.gamma + 1)
+                + self.llm_time_per_token * q_tokens
                 + self.llm_time_per_kv_cell * kv_cells)
 
     def prefill_time(self, tokens: int, kv_cells: float = 0.0) -> float:
@@ -75,24 +84,26 @@ class SimResult:
     per_ssm_finish: List[float]
 
 
-def _kv_cells(kv_cells_per_req, j: int) -> float:
-    """Attended KV cells per request for SSM j's micro-batches.
+def _per_req(val, j: int, default: float = 0.0) -> float:
+    """Per-request quantity for SSM j, given either a scalar (uniform
+    across SSMs) or a per-SSM sequence.
 
     Continuous batching makes per-slot batches ragged: each SSM drafts for
     however many requests are currently assigned to it, and those requests
-    have genuinely different context lengths.  ``kv_cells_per_req`` may
-    therefore be a single float (uniform padded grid) or a per-SSM
-    sequence of mean cells (ragged packed grid)."""
-    if kv_cells_per_req is None:
-        return 0.0
-    if isinstance(kv_cells_per_req, (int, float)):
-        return float(kv_cells_per_req)
-    return float(kv_cells_per_req[j])
+    have genuinely different context lengths (``kv_cells_per_req``) and —
+    with the goodput-aware gamma controller — genuinely different draft
+    depths (``depth_per_req``)."""
+    if val is None:
+        return default
+    if isinstance(val, (int, float)):
+        return float(val)
+    return float(val[j])
 
 
 def simulate(cost: CostModel, ssm_batches: Sequence[int],
              micro_batches: Sequence[int],
-             kv_cells_per_req=0.0, prefill_time: float = 0.0) -> SimResult:
+             kv_cells_per_req=0.0, prefill_time: float = 0.0,
+             depth_per_req=None) -> SimResult:
     """Event-time simulation of one speculation+verification iteration.
 
     ssm_batches[j]: requests drafted on SSM j.  micro_batches[j]: number of
@@ -100,21 +111,25 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
     they become ready; verification of micro-batch m overlaps drafting of
     m+1 (paper Fig. 6b).  kv_cells_per_req: attended KV cells per request —
     scalar (padded grid, §V-A) or per-SSM sequence (ragged per-slot batches
-    under continuous batching).  prefill_time: LLM time spent ingesting
-    prompt tokens this slot (chunked-prefill grants or a monolithic
-    admission); it occupies the LLM before any verification starts, while
-    SSM drafting proceeds concurrently — the interleaving a token-budget
-    step planner exists to bound."""
+    under continuous batching).  depth_per_req: draft depth per request —
+    scalar or per-SSM sequence of mean granted depths (the gamma
+    controller makes speculation depth a per-request quantity; default
+    cost.gamma reproduces the uniform-depth model).  prefill_time: LLM
+    time spent ingesting prompt tokens this slot (chunked-prefill grants
+    or a monolithic admission); it occupies the LLM before any
+    verification starts, while SSM drafting proceeds concurrently — the
+    interleaving a token-budget step planner exists to bound."""
     ready: List[Tuple[float, int, int]] = []   # (ready_time, ssm, size)
     finish = [0.0] * len(ssm_batches)
     for j, (bj, mj) in enumerate(zip(ssm_batches, micro_batches)):
         if bj <= 0:
             continue
+        kj = _per_req(depth_per_req, j, cost.gamma)
         mj = max(1, min(mj, bj))
         sizes = [bj // mj + (1 if r < bj % mj else 0) for r in range(mj)]
         t = 0.0
         for sz in sizes:
-            t += cost.draft_time(j, sz)
+            t += cost.draft_time(j, sz, tokens=sz * kj)
             heapq.heappush(ready, (t, j, sz))
         finish[j] = t
     llm_t = max(0.0, float(prefill_time))
@@ -122,7 +137,9 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
     while ready:
         rt, j, sz = heapq.heappop(ready)
         start = max(llm_t, rt)
-        dur = cost.verify_time(sz, _kv_cells(kv_cells_per_req, j) * sz)
+        kj = _per_req(depth_per_req, j, cost.gamma)
+        dur = cost.verify_time(sz, _per_req(kv_cells_per_req, j) * sz,
+                               q_tokens=sz * (kj + 1))
         llm_t = start + dur
         busy += dur
     makespan = llm_t
@@ -134,29 +151,31 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
 def goodput_estimate(cost: CostModel, ssm_batches: Sequence[int],
                      micro_batches: Sequence[int],
                      accept_rates: Sequence[float],
-                     kv_cells_per_req=0.0) -> float:
+                     kv_cells_per_req=0.0, depth_per_req=None) -> float:
     """Accepted tokens per second for one iteration under the schedule."""
-    sim = simulate(cost, ssm_batches, micro_batches, kv_cells_per_req)
+    sim = simulate(cost, ssm_batches, micro_batches, kv_cells_per_req,
+                   depth_per_req=depth_per_req)
     if sim.makespan <= 0:
         return 0.0
-    tokens = sum(b * (a * cost.gamma + 1.0)
-                 for b, a in zip(ssm_batches, accept_rates))
+    tokens = sum(b * (a * _per_req(depth_per_req, j, cost.gamma) + 1.0)
+                 for j, (b, a) in enumerate(zip(ssm_batches, accept_rates)))
     return tokens / sim.makespan
 
 
 def choose_micro_batches(cost: CostModel, ssm_batches: Sequence[int],
                          accept_rates: Sequence[float], *, b0: int = 2,
                          tol: float = 0.02, max_mb: int = 16,
-                         kv_cells_per_req=0.0) -> Tuple[List[int], float]:
+                         kv_cells_per_req=0.0,
+                         depth_per_req=None) -> Tuple[List[int], float]:
     """Paper §V-B heuristic: iteratively split each SSM's batch further while
     the (offline-profiled) throughput does not significantly degrade."""
     n = len(ssm_batches)
     mb = [1] * n
     best = goodput_estimate(cost, ssm_batches, mb, accept_rates,
-                            kv_cells_per_req)
+                            kv_cells_per_req, depth_per_req)
     cur = [min(b0, max(1, b)) for b in ssm_batches]
     cur_g = goodput_estimate(cost, ssm_batches, cur, accept_rates,
-                             kv_cells_per_req)
+                             kv_cells_per_req, depth_per_req)
     if cur_g >= best * (1 - tol):
         mb, best = cur, max(best, cur_g)
         while max(mb) < max_mb:
@@ -164,7 +183,7 @@ def choose_micro_batches(cost: CostModel, ssm_batches: Sequence[int],
             if nxt == mb:
                 break
             g = goodput_estimate(cost, ssm_batches, nxt, accept_rates,
-                                 kv_cells_per_req)
+                                 kv_cells_per_req, depth_per_req)
             if g < best * (1 - tol):        # significant degradation: stop
                 break
             if g > best:
@@ -194,7 +213,6 @@ def profile_cost_model(ssm_bundles, llm_bundle, gamma: int,
     import time
     import jax
     import jax.numpy as jnp
-    from repro.core import spec_decode as sd
 
     def _time(fn, *a):
         fn(*a)                     # compile
@@ -204,7 +222,6 @@ def profile_cost_model(ssm_bundles, llm_bundle, gamma: int,
         jax.block_until_ready(jax.tree.leaves(out)[0])
         return (time.perf_counter() - t0) / 3
 
-    rng = jax.random.PRNGKey(0)
     per_tok, fixed = [], []
     for b in ssm_bundles:
         toks = jnp.zeros((sample_batch, sample_len), jnp.int32)

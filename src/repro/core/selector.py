@@ -22,7 +22,6 @@ Baselines from §VI-B2: Greedy (prompt-length buckets) and epsilon-greedy.
 from __future__ import annotations
 
 import dataclasses
-import math
 import random
 from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -98,6 +97,13 @@ class LBSS:
         self.phase = "explore"
         self.sum: Dict[Tuple[int, int], float] = defaultdict(float)
         self.cnt: Dict[Tuple[int, int], int] = defaultdict(int)
+        # per-(group, SSM) draft-acceptance running means, the input the
+        # goodput-aware gamma controller (core/gamma.py) reads.  Kept
+        # separate from goodput: goodput folds in batch/timing effects,
+        # acceptance is the pure draft-quality signal the depth argmax
+        # needs.
+        self.acc_sum: Dict[Tuple[int, int], float] = defaultdict(float)
+        self.acc_cnt: Dict[Tuple[int, int], int] = defaultdict(int)
         self._chunk_assign: Dict[int, int] = {}
         self._exploit_assign: Dict[int, int] = {}
         self._exploit_cohort: frozenset = frozenset()
@@ -135,6 +141,28 @@ class LBSS:
         self.sum[(g, ssm)] += goodput
         self.cnt[(g, ssm)] += 1
 
+    def observe_accept(self, request_id: int, ssm: int, rate: float):
+        """Record one iteration's draft-acceptance fraction
+        (accepted / drafted) for the request's group on this SSM."""
+        g = self._group(request_id)
+        self.acc_sum[(g, ssm)] += float(rate)
+        self.acc_cnt[(g, ssm)] += 1
+
+    def accept_estimate(self, request_id: int, ssm: int) -> Optional[float]:
+        """Mean acceptance rate of the request's group on this SSM; falls
+        back to the global mean over all (group, SSM) pairs, and to None
+        before any observation at all (the gamma controller then applies
+        its prior).  Like ``estimate``, survives retire() — a re-admitted
+        request resumes with everything its group already learned."""
+        g = self._group(request_id)
+        c = self.acc_cnt[(g, ssm)]
+        if c:
+            return self.acc_sum[(g, ssm)] / c
+        n = sum(self.acc_cnt.values())
+        if n:
+            return sum(self.acc_sum.values()) / n
+        return None
+
     # -- assignment ---------------------------------------------------------
     def _random_capped(self, request_ids: Sequence[int]) -> Dict[int, int]:
         """Algorithm 2 lines 3-11: random choice then cap at B_j."""
@@ -164,8 +192,24 @@ class LBSS:
             for b, j in enumerate(slots):
                 W[a, b] = self.estimate(i, j)
         cols = km_match(W)
-        return {i: (slots[c] if c >= 0 else 0)
-                for i, c in zip(request_ids, cols)}
+        out = {}
+        load = [0] * self.cfg.n_ssms
+        unmatched = []
+        for i, c in zip(request_ids, cols):
+            if c >= 0:
+                out[i] = slots[c]
+                load[slots[c]] += 1
+            else:
+                unmatched.append(i)
+        # unmatched requests (all-zero estimates / padding-column ties)
+        # fill SSMs by remaining headroom — defaulting them all to SSM 0
+        # can overflow its batch cap B_0 and with it the draft pool
+        for i in unmatched:
+            j = min(range(self.cfg.n_ssms),
+                    key=lambda x: load[x] - self.cfg.batch_limits[x])
+            out[i] = j
+            load[j] += 1
+        return out
 
     def assign(self, request_ids: Sequence[int]) -> Dict[int, int]:
         """One time slot: returns request_id -> ssm index."""
@@ -174,10 +218,24 @@ class LBSS:
             if self.slot_in_phase % cfg.beta == 0:
                 self._chunk_assign = self._random_capped(request_ids)
             else:
-                # keep chunk assignment; new arrivals get random slots
+                # keep chunk assignment; new arrivals get random slots —
+                # redirected to the least-loaded SSM when the random pick
+                # is already at its batch cap (Algorithm 2's overflow
+                # rule; same rng stream when caps never bind)
+                load = [0] * cfg.n_ssms
+                for r in request_ids:
+                    a = self._chunk_assign.get(r)
+                    if a is not None:
+                        load[a] += 1
                 for i in request_ids:
                     if i not in self._chunk_assign:
-                        self._chunk_assign[i] = self.rng.randrange(cfg.n_ssms)
+                        j = self.rng.randrange(cfg.n_ssms)
+                        if load[j] >= cfg.batch_limits[j]:
+                            j = min(range(cfg.n_ssms),
+                                    key=lambda x: load[x]
+                                    - cfg.batch_limits[x])
+                        self._chunk_assign[i] = j
+                        load[j] += 1
             out = {i: self._chunk_assign[i] for i in request_ids}
             self.slot_in_phase += 1
             if self.slot_in_phase >= cfg.alpha:

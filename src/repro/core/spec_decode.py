@@ -19,7 +19,6 @@ caches only, recurrent-state verifiers use snapshot+recompute (see engine).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -134,7 +133,6 @@ def draft(ssm: Bundle, cache, last_tokens, lengths, gamma: int, rng,
     """Generate gamma candidates. last_tokens: (B,1) previous accepted token.
     Returns (cand (B,gamma), qprobs (B,gamma,V)|None, cache).
     block_tables routes the decode steps through the paged KV pool."""
-    B = last_tokens.shape[0]
     cands, qs = [], []
     tok = last_tokens
     for g in range(gamma):

@@ -16,10 +16,8 @@ free, a miss falls back to synchronous recompute (cost accounted).
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
-import jax
 import jax.numpy as jnp
 
 

@@ -15,7 +15,7 @@ CPU-testable without any mesh (quantize/dequantize are pure functions).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

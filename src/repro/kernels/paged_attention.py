@@ -239,14 +239,15 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
 
     Tq_p = int(np.ceil(Tq / bq) * bq)
     qp = jnp.pad(q, ((0, Tq_p - Tq), (0, 0), (0, 0)))
-    pad_i32 = lambda x, n: jnp.pad(x.astype(jnp.int32), (0, n),
-                                   constant_values=-1)
+    def pad_i32(x, n):
+        return jnp.pad(x.astype(jnp.int32), (0, n), constant_values=-1)
     q_seg_p = pad_i32(q_seg, Tq_p - Tq)
     q_pos_p = pad_i32(q_pos, Tq_p - Tq)
     ids = jnp.maximum(block_ids.astype(jnp.int32), 0)
     owner = block_owner.astype(jnp.int32)
 
-    blk = lambda i, j, ids, ow: (ids[j], 0)
+    def blk(i, j, ids, ow):
+        return (ids[j], 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -129,8 +129,8 @@ def verify_attention(q, k, v, q_seg, q_pos, kv_seg, kv_pos, *,
     qp = jnp.pad(q, ((0, Tq_p - Tq), (0, 0), (0, 0)))
     kp = jnp.pad(k, ((0, Tkv_p - Tkv), (0, 0), (0, 0)))
     vp = jnp.pad(v, ((0, Tkv_p - Tkv), (0, 0), (0, 0)))
-    pad_i32 = lambda x, n: jnp.pad(x.astype(jnp.int32), (0, n),
-                                   constant_values=-1)
+    def pad_i32(x, n):
+        return jnp.pad(x.astype(jnp.int32), (0, n), constant_values=-1)
     q_seg_p = pad_i32(q_seg, Tq_p - Tq)
     q_pos_p = pad_i32(q_pos, Tq_p - Tq)
     kv_seg_p = pad_i32(kv_seg, Tkv_p - Tkv)

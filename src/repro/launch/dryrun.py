@@ -360,7 +360,6 @@ def main():
     args = ap.parse_args()
 
     opts = T.Opts(remat=args.remat)
-    cells = []
     archs = registry.ASSIGNED if (args.all or not args.arch) \
         else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]

@@ -22,7 +22,7 @@ import json
 
 import jax
 
-from repro.configs import registry, spin_llama
+from repro.configs import spin_llama
 from repro.core import spec_decode as sd
 from repro.core.selector import (LBSS, EpsilonGreedy, GreedyPromptLength,
                                  SelectorConfig)
@@ -69,7 +69,21 @@ def main(argv=None):
     ap.add_argument("--selector", default="lbss",
                     choices=["lbss", "eps", "greedy"])
     ap.add_argument("--n-ssms", type=int, default=3)
-    ap.add_argument("--gamma", type=int, default=4)
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="speculation depth: the uniform per-request depth "
+                         "under --gamma-policy fixed, the cold-start "
+                         "default under adaptive")
+    ap.add_argument("--gamma-policy", default="fixed",
+                    choices=["fixed", "adaptive"],
+                    help="fixed: draft --gamma tokens for every request "
+                         "every slot (seed behaviour, bit-identical); "
+                         "adaptive: per-request expected-goodput depth in "
+                         "[1, --gamma-max] from the selector's acceptance "
+                         "estimates, load-capped under --token-budget")
+    ap.add_argument("--gamma-max", type=int, default=None,
+                    help="adaptive speculation-depth cap (KV margins and "
+                         "admission reserve this worst case); default "
+                         "2 * --gamma")
     ap.add_argument("--vocab", type=int, default=256)
     ap.add_argument("--no-packed", action="store_true")
     ap.add_argument("--no-pipeline", action="store_true")
@@ -111,6 +125,10 @@ def main(argv=None):
     if args.token_budget is not None and args.token_budget <= 0:
         ap.error("--token-budget must be positive (omit it for "
                  "unthrottled slots)")
+    if args.gamma <= 0:
+        ap.error("--gamma must be positive")
+    if args.gamma_max is not None and args.gamma_max <= 0:
+        ap.error("--gamma-max must be positive (omit it for 2 * --gamma)")
     if args.arrival_rate is not None and args.arrival_rate <= 0:
         ap.error("--arrival-rate must be positive (omit it for "
                  "all-at-t=0 arrivals)")
@@ -125,7 +143,8 @@ def main(argv=None):
     sel = make_selector(args.selector, len(ssms), capacity,
                         {r.rid: r.prompt_len for r in reqs}, args.seed,
                         group_of={r.rid: r.dataset for r in reqs})
-    ecfg = EngineConfig(gamma=args.gamma, max_len=256,
+    ecfg = EngineConfig(gamma=args.gamma, gamma_policy=args.gamma_policy,
+                        gamma_max=args.gamma_max, max_len=256,
                         capacity=capacity,
                         use_packed_verify=not args.no_packed,
                         use_pipeline=not args.no_pipeline,

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 
@@ -155,7 +155,6 @@ class ModelConfig:
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
     """A tiny same-family config for CPU smoke tests."""
-    kinds = list(cfg.unit) * cfg.n_units + list(cfg.tail)
     # keep one unit + tail so every block kind is exercised
     small_unit = cfg.unit
     n_layers = 2 * len(small_unit) + len(cfg.tail)

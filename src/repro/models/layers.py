@@ -10,8 +10,6 @@ validated against ``repro.kernels.ref`` which mirrors this module.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax import lax

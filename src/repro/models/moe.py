@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.distributed.sharding import constrain
 
 
 def capacity(n_tokens: int, n_experts: int, top_k: int, cf: float) -> int:

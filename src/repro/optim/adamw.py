@@ -10,7 +10,7 @@ partitioned optimizer state under the `data` mesh axis for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -48,13 +48,15 @@ class AdamW:
     clip_norm: float = 1.0
 
     def init(self, params) -> AdamWState:
-        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def f32(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return AdamWState(step=jnp.zeros((), jnp.int32),
                           mu=jax.tree.map(f32, params),
                           nu=jax.tree.map(f32, params))
 
     def abstract_state(self, abstract_params) -> AdamWState:
-        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        def f32(p):
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
         return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
                           mu=jax.tree.map(f32, abstract_params),
                           nu=jax.tree.map(f32, abstract_params))

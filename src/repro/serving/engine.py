@@ -14,12 +14,20 @@ Per time slot:
      the row's block table);
   1. the selector assigns each active request to an SSM (LBSS / baselines);
      switches go through the SwitchManager (fast pre-computed switching);
-  2. every SSM drafts gamma candidates for its batch (static-shape pools);
-  3. the LLM verifies all candidates — padded (vanilla) or packed via
-     request decomposition (§V-A);
-  4. accepted tokens are committed, caches rolled back, goodput observed
-     back into the selector; rows of finished requests are recycled and
-     immediately re-filled from the waiting queue (same step).
+  2. the gamma controller (core/gamma.py) grants every request a
+     speculation depth k_i in [1, gamma_max] — ``fixed`` policy: the
+     uniform ``gamma`` everywhere (bit-identical to the pre-controller
+     engine); ``adaptive``: expected-goodput argmax over the selector's
+     per-(request, SSM) acceptance estimates, with a load-aware cap when
+     the step planner's token budget is contended;
+  3. every SSM drafts its rows' granted depths (static-shape pools at the
+     slot's max depth; tail positions beyond a row's grant are masked);
+  4. the LLM verifies all candidates — padded (vanilla) or packed via
+     request decomposition (§V-A) — accepting at most k_i per row;
+  5. accepted tokens are committed, caches rolled back, goodput and
+     acceptance observed back into the selector; rows of finished requests
+     are recycled and immediately re-filled from the waiting queue (same
+     step).
 
 The engine clock is the simulated time: requests whose ``arrival``
 timestamp lies in the future stay queued until the clock reaches them,
@@ -52,7 +60,7 @@ import numpy as np
 from repro.core import decompose as D
 from repro.core import pipeline as P
 from repro.core import spec_decode as sd
-from repro.core.selector import LBSS, SelectorConfig
+from repro.core.gamma import GammaConfig, GammaController
 from repro.core.switching import SwitchManager
 from repro.data.workloads import Request
 from repro.models import transformer as T
@@ -71,6 +79,14 @@ class EngineConfig:
     appended as the engine grows and positional construction would
     silently shift arguments."""
     gamma: int = 4
+    # speculation-depth policy (core/gamma.py): "fixed" drafts gamma tokens
+    # for every request every slot (bit-identical to the pre-controller
+    # engine); "adaptive" grants each request k in [1, gamma_max] by
+    # expected-goodput argmax over the selector's acceptance estimates.
+    gamma_policy: str = "fixed"
+    # adaptive depth cap; None -> 2 * gamma ("fixed" always uses gamma).
+    # Pools, KV margins and admission reserve this worst case.
+    gamma_max: Optional[int] = None
     max_len: int = 256
     capacity: int = 16                 # concurrent requests (LLM pool rows)
     use_packed_verify: bool = True
@@ -112,6 +128,11 @@ class SpinEngine:
         self.ecfg = ecfg
         if ecfg.kv_layout not in ("paged", "dense"):
             raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}")
+        if ecfg.gamma_policy == "fixed":
+            self.gamma_max = ecfg.gamma
+        else:
+            self.gamma_max = (ecfg.gamma_max if ecfg.gamma_max is not None
+                              else 2 * ecfg.gamma)
         self.paged = (ecfg.kv_layout == "paged"
                       and paged_compatible(llm.cfg)
                       and all(paged_compatible(b.cfg) for b in self.ssms))
@@ -150,6 +171,10 @@ class SpinEngine:
             ssm_time_per_token=[1e-4 * (j + 1) for j in range(len(ssms))],
             ssm_fixed=[2e-4] * len(ssms),
             llm_fixed=1e-3, llm_time_per_token=5e-4, gamma=ecfg.gamma)
+        self.gamma_ctl = GammaController(
+            GammaConfig(policy=ecfg.gamma_policy, gamma=ecfg.gamma,
+                        gamma_max=self.gamma_max),
+            self.cost, selector)
         self.failed_ssms: set = set()
         self.requests: Dict[int, Request] = {}
         self.assignment: Dict[int, int] = {}
@@ -161,7 +186,8 @@ class SpinEngine:
                         and ecfg.scheduler_policy == "continuous"
                         and not llm.has_recurrent_state)
         self.scheduler = ContinuousScheduler(SchedulerConfig(
-            capacity=ecfg.capacity, max_len=self.max_len, gamma=ecfg.gamma,
+            capacity=ecfg.capacity, max_len=self.max_len,
+            gamma=self.gamma_max,
             kv_budget=sched_budget, policy=ecfg.scheduler_policy,
             block_size=ecfg.block_size if self.paged else 0,
             prefill_chunk=ecfg.prefill_chunk if self.chunked else 0,
@@ -198,12 +224,12 @@ class SpinEngine:
             # context + speculation window.  Validating here keeps every
             # later (re-)prefill in bounds — a silent out-of-range scatter
             # would corrupt the cache instead of erroring.
-            need = r.prompt_len + r.max_new + self.ecfg.gamma + 1
+            need = r.prompt_len + r.max_new + self.gamma_max + 1
             if need > self.max_len:
                 raise ValueError(
                     f"request {r.rid} needs up to {need} KV slots "
                     f"(prompt {r.prompt_len} + max_new {r.max_new} + "
-                    f"gamma+1) > max_len={self.max_len}")
+                    f"gamma_max+1) > max_len={self.max_len}")
         self.scheduler.submit(reqs)
         self._schedule()
 
@@ -330,6 +356,7 @@ class SpinEngine:
             self.ssm_pools[j].evict(rid)
         if hasattr(self.selector, "retire"):
             self.selector.retire(rid)
+        self.gamma_ctl.retire(rid)
         self.scheduler.mark_preempted(r, self.sim_time)
 
     def _finish(self, r: Request):
@@ -341,6 +368,7 @@ class SpinEngine:
             self.ssm_pools[j].evict(r.rid)
         if hasattr(self.selector, "retire"):
             self.selector.retire(r.rid)
+        self.gamma_ctl.retire(r.rid)
         self.scheduler.mark_finished(r.rid)
 
     def fail_ssm(self, j: int):
@@ -411,12 +439,6 @@ class SpinEngine:
                 return rec
             return {"done": True}
         ids = [r.rid for r in active]
-        if self.paged:
-            # append-a-block growth: cover context + speculation window
-            # before this slot's decode/verify writes land
-            self.llm_pool.ensure_rows({
-                r.rid: int(self.llm_pool.lengths[self.llm_pool.row_of[r.rid]])
-                + self.ecfg.gamma + 1 for r in active})
         assign = self.selector.assign(ids)
 
         # apply switches / placements
@@ -431,40 +453,62 @@ class SpinEngine:
                     self.ssm_pools[prev].has(rid):
                 self.ssm_pools[prev].evict(rid)
             if not self.ssm_pools[j].has(rid):
-                self._place_on_ssm(rid, j)
+                self._place_on_ssm(rid, j, assign)
             self.assignment[rid] = j
 
-        # draft on every SSM pool (static shapes)
+        # per-request speculation depths for this slot (goodput-aware
+        # argmax on the selector's acceptance estimates; "fixed" policy:
+        # the uniform ecfg.gamma).  The cap charges the prompt-chunk
+        # tokens this slot's plan already granted, so decode + prefill
+        # together respect the token budget; the scheduler's next
+        # token-budget split costs decode slots at these granted depths.
+        depths = self.gamma_ctl.grant(
+            ids, assign,
+            token_budget=self.ecfg.token_budget if self.chunked else None,
+            reserved_tokens=self.scheduler.last_prefill_granted)
+        self.scheduler.set_decode_depths(depths)
+        if self.paged:
+            # append-a-block growth: cover context + this slot's granted
+            # speculation window (k_i + 1) before decode/verify writes land
+            self.llm_pool.ensure_rows({
+                r.rid: int(self.llm_pool.lengths[self.llm_pool.row_of[r.rid]])
+                + depths[r.rid] + 1 for r in active})
+
+        # draft on every SSM pool (static shapes at the pool's slot-max
+        # depth; rows granted less contribute only their k_i-token prefix)
         drafts: Dict[int, np.ndarray] = {}
-        draft_times = []
         per_ssm_batch = []
+        per_ssm_depth = []
         for j, (b, pool) in enumerate(zip(self.ssms, self.ssm_pools)):
             rids = [r for r in ids if assign.get(r) == j]
             per_ssm_batch.append(len(rids))
             if not rids or j in self.failed_ssms:
-                draft_times.append(0.0)
+                per_ssm_depth.append(float(self.cost.gamma))
                 continue
-            cand = self._draft_pool(j)
+            # ragged per-slot batch: cost covers the requests actually
+            # assigned this slot at their granted depths, not the static
+            # pool capacity at a uniform gamma
+            per_ssm_depth.append(float(np.mean([depths[r] for r in rids])))
+            cand = self._draft_pool(j, max(depths[r] for r in rids), depths)
             rows = pool.rows(rids)
             for rid, row in zip(rids, rows):
-                drafts[rid] = cand[row]
-            # ragged per-slot batch: cost covers the requests actually
-            # assigned this slot, not the static pool capacity
-            draft_times.append(self.cost.draft_time(j, len(rids)))
-        self.total_drafted += sum(per_ssm_batch) * self.ecfg.gamma
+                drafts[rid] = cand[row, :depths[rid]]
+        self.total_drafted += sum(depths.values())
 
-        # verification (functional, full batch)
-        n_acc, out, out_len = self._verify(ids, drafts)
+        # verification (functional, full batch; per-row depth masking)
+        n_acc, out, out_len = self._verify(ids, drafts, depths)
 
         # simulated slot timeline (pipeline §V-B); verification cost sees
         # the padded vs decomposed-packed KV grid size (§V-A), ragged per
-        # SSM under continuous batching
-        accept_rates = self._accept_rates_per_ssm(assign, ids, n_acc)
-        kv_cells_per_req = self._kv_cells_per_ssm(assign, ids)
+        # SSM under continuous batching — and ragged draft depths under
+        # the adaptive gamma policy
+        accept_rates = self._accept_rates_per_ssm(assign, ids, n_acc, depths)
+        kv_cells_per_req = self._kv_cells_per_ssm(assign, ids, depths)
         if self.ecfg.use_pipeline:
             mb = self.ecfg.micro_batches or P.choose_micro_batches(
                 self.cost, per_ssm_batch, accept_rates,
-                kv_cells_per_req=kv_cells_per_req)[0]
+                kv_cells_per_req=kv_cells_per_req,
+                depth_per_req=per_ssm_depth)[0]
         else:
             mb = [1] * len(self.ssms)
         # mixed slot: chunk-prefill work issued this step (and monolithic
@@ -472,11 +516,13 @@ class SpinEngine:
         # verify queue while SSMs draft concurrently
         pre_t, pre_n = self._consume_prefill()
         slot = self._simulate_slot(per_ssm_batch, mb, kv_cells_per_req,
-                                   prefill_time=pre_t)
+                                   prefill_time=pre_t,
+                                   depth_per_req=per_ssm_depth)
 
-        # commit tokens, update request state, observe goodput
+        # commit tokens, update request state, observe goodput + acceptance
         self.sim_time += slot.makespan
         slot_tokens = 0
+        observe_accept = getattr(self.selector, "observe_accept", None)
         for i, rid in enumerate(ids):
             r = self.requests[rid]
             k = int(out_len[i])
@@ -484,8 +530,15 @@ class SpinEngine:
             slot_tokens += k
             g = k / max(slot.makespan, 1e-9)
             self.selector.observe(rid, assign[rid], g)
-            self._accept_by_req.setdefault(rid, []).append(
-                float(n_acc[i]) / self.ecfg.gamma)
+            # per-token acceptance estimate: successes over positions
+            # actually tested — the accept chain stops at the first
+            # rejection, so n_acc/k would bias deep grants low (a
+            # truncated-geometric mean) and collapse adaptive depths
+            tested = min(depths[rid], int(n_acc[i]) + 1)
+            rate = float(n_acc[i]) / tested
+            if observe_accept is not None:
+                observe_accept(rid, assign[rid], rate)
+            self._accept_by_req.setdefault(rid, []).append(rate)
             if len(r.emitted) - 1 >= r.max_new:
                 self._finish(r)
         self.accepted_tokens += slot_tokens
@@ -510,15 +563,21 @@ class SpinEngine:
     # ---------------------------------------------------------- internals --
     def _switch_width(self, j: int, length: int) -> int:
         """Cache width for switch prefills/precomputes on SSM j.  Paged
-        pools only need the context's blocks (plus a gamma+1 growth margin
-        so a next-slot switch still hits) — O(context), not the
-        capacity-proportional max_len the dense layout requires."""
+        pools only need the context's blocks (plus a gamma_max+1 growth
+        margin so a next-slot switch still hits at any granted depth) —
+        O(context), not the capacity-proportional max_len the dense layout
+        requires."""
         if not self.paged:
             return self.max_len
-        need = min(self.max_len, length + self.ecfg.gamma + 1)
+        need = min(self.max_len, length + self.gamma_max + 1)
         return self.ssm_pools[j].prefill_len(_bucket(need))
 
-    def _place_on_ssm(self, rid: int, j: int):
+    def _place_on_ssm(self, rid: int, j: int, current):
+        """Switch-place ``rid`` on SSM j's pool.  ``current`` is this
+        slot's full assignment map: residents NOT placed here this slot
+        are the eviction candidates (a resident may still carry a stale
+        ``self.assignment`` entry while it moves away later in the same
+        placement pass)."""
         r = self.requests[rid]
         tokens = np.concatenate([np.asarray(r.prompt),
                                  np.asarray(r.emitted[:-1], np.int64)])
@@ -529,8 +588,13 @@ class SpinEngine:
         while not pool.can_admit(length):
             # evict someone not assigned here this slot (frees the row
             # and, under paging, its blocks)
-            victim = next(rr for rr in pool.row_of
-                          if self.assignment.get(rr) != j)
+            victim = next((rr for rr in pool.row_of
+                           if current.get(rr) != j), None)
+            if victim is None:
+                raise RuntimeError(
+                    f"SSM {j} draft pool over-committed: all "
+                    f"{len(pool.row_of)} residents are assigned here this "
+                    f"slot — selector batch_limits[{j}] exceeds the pool")
             pool.evict(victim)
         pool.insert(rid, cache, length, r.emitted[-1])
 
@@ -549,49 +613,61 @@ class SpinEngine:
             self.switcher.precompute(rid, dst, tokens, len(tokens),
                                      self._switch_width(dst, len(tokens)))
 
-    def _draft_pool(self, j: int) -> np.ndarray:
-        """Draft gamma tokens for every row of SSM j's pool; returns
-        (capacity, gamma) candidates.  Inactive rows are drafted too (static
-        shape); dense rows are re-invalidated afterwards, paged idle rows
-        own no blocks so their writes are dropped at the source."""
+    def _draft_pool(self, j: int, width: int, depths) -> np.ndarray:
+        """Draft ``width`` tokens (the slot-max granted depth on this SSM)
+        for every row of SSM j's pool; returns (capacity, width)
+        candidates — callers take each row's granted k_i-prefix.  Inactive
+        rows are drafted too (static shape); dense rows are re-invalidated
+        afterwards, paged idle rows own no blocks so their writes are
+        dropped at the source."""
         b = self.ssms[j]
         pool = self.ssm_pools[j]
         lengths = jnp.asarray(pool.lengths, jnp.int32)
         tok = jnp.asarray(pool.last_token, jnp.int32)[:, None]
         self.rng, k = jax.random.split(self.rng)
         if self.paged:
-            # cover draft writes (ctx..ctx+gamma-1) and the catch-up hole
-            # fill (ctx+1..ctx+gamma+1) before any decode lands
+            # cover draft writes (ctx..ctx+k_i-1) and the catch-up hole
+            # fill (ctx+1..ctx+k_i+1) before any decode lands
             pool.ensure_rows({
-                rid: int(pool.lengths[row]) + self.ecfg.gamma + 2
+                rid: int(pool.lengths[row]) + depths.get(rid, width) + 2
                 for rid, row in pool.row_of.items()})
             bt, _ = pool.block_table_array()
             cand, _, cache = sd.draft(b, pool.cache, tok, lengths,
-                                      self.ecfg.gamma, k, block_tables=bt)
+                                      width, k, block_tables=bt)
             pool.cache = cache
             return np.asarray(cand)
         cand, _, cache = sd.draft(b, pool.cache, tok, lengths,
-                                  self.ecfg.gamma, k)
+                                  width, k)
         pool.cache = cache
         idle = [row for row in range(pool.capacity)
                 if row not in pool.row_of.values()]
         pool.invalidate_rows(idle)
         return np.asarray(cand)
 
-    def _verify(self, ids, drafts):
-        """LLM verification over the full pool (padded or packed)."""
-        gamma = self.ecfg.gamma
+    def _verify(self, ids, drafts, depths):
+        """LLM verification over the full pool (padded or packed).
+
+        ``depths`` maps request -> granted speculation depth.  The forward
+        runs at the slot's max depth W (static shape per W; at most
+        gamma_max distinct traces); rows granted less carry zero-padded
+        candidate tails whose match is masked out, so a row can never
+        accept beyond its grant, and whose speculative KV writes land in
+        the rollback scrub window like any rejected draft."""
+        W = max(depths[rid] for rid in ids)
         N = self.llm_pool.capacity
-        cand = np.zeros((N, gamma), np.int32)
+        cand = np.zeros((N, W), np.int32)
+        k_row = np.zeros(N, np.int64)
         lengths = jnp.asarray(self.llm_pool.lengths, jnp.int32)
         last = jnp.asarray(self.llm_pool.last_token, jnp.int32)[:, None]
         rows = self.llm_pool.rows(ids)
         for rid, row in zip(ids, rows):
-            cand[row] = drafts.get(rid, np.zeros(gamma, np.int32))
+            d = drafts.get(rid, np.zeros(depths[rid], np.int32))
+            cand[row, :len(d)] = d
+            k_row[row] = depths[rid]
         cand = jnp.asarray(cand)
 
         if self.ecfg.use_packed_verify:
-            logits = self._verify_packed(cand, lengths, last)
+            logits = self._verify_packed(cand, lengths, last, W)
         else:
             inp = jnp.concatenate([last, cand], axis=1)
             if self.paged:
@@ -605,29 +681,32 @@ class SpinEngine:
         V = self.llm.cfg.vocab_size
         greedy = jnp.argmax(logits.astype(jnp.float32)[..., :V],
                             axis=-1).astype(jnp.int32)
-        match = greedy[:, :gamma] == cand
+        # per-row depth mask: positions at or beyond a row's grant can
+        # never match (they hold padding, not drafts)
+        in_depth = jnp.arange(W)[None] < jnp.asarray(k_row, jnp.int32)[:, None]
+        match = (greedy[:, :W] == cand) & in_depth
         n_acc_all = jnp.sum(jnp.cumprod(match.astype(jnp.int32), 1), 1)
-        idx = jnp.arange(gamma + 1)[None]
+        idx = jnp.arange(W + 1)[None]
         out_all = jnp.where(idx < n_acc_all[:, None],
                             jnp.pad(cand, ((0, 0), (0, 1))), 0)
         bonus = jnp.take_along_axis(greedy, n_acc_all[:, None], axis=1)
         out_all = out_all.at[jnp.arange(N), n_acc_all].set(bonus[:, 0])
 
         # rollback: keep accepted prefix only (paged: trim the tail block
-        # in place — a gamma-wide seg scatter through the block table)
+        # in place — a W-wide seg scatter through the block table)
         if self.paged:
             self.llm_pool.invalidate_span(lengths + 1 + n_acc_all,
-                                          lengths + gamma + 1, W=gamma)
+                                          lengths + W + 1, W=W)
         else:
             self.llm_pool.cache = sd.invalidate_slots_jit(
                 self.llm_pool.cache, lengths + 1 + n_acc_all,
-                lengths + gamma + 1)
+                lengths + W + 1)
             self.llm_pool.invalidate_rows(
                 [row for row in range(N)
                  if row not in self.llm_pool.row_of.values()])
         # prefilling rows are live pool rows but take no part in this
         # verify: the full-pool forward still wrote speculative KV at
-        # their positions [len, len+gamma+1) — scrub all of it, or a later
+        # their positions [len, len+W+1) — scrub all of it, or a later
         # chunk landing below those positions would leave stale
         # attendable garbage beyond the context
         pre_rows = [self.llm_pool.row_of[rid]
@@ -639,22 +718,22 @@ class SpinEngine:
             lens_now = np.asarray(self.llm_pool.lengths, np.int64)
             for row in pre_rows:
                 lo[row] = lens_now[row]
-                hi[row] = lens_now[row] + gamma + 1
+                hi[row] = lens_now[row] + W + 1
             if self.paged:
                 self.llm_pool.invalidate_span(
                     jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
-                    W=gamma + 1)
+                    W=W + 1)
             else:
                 self.llm_pool.cache = sd.invalidate_slots_jit(
                     self.llm_pool.cache, jnp.asarray(lo, jnp.int32),
                     jnp.asarray(hi, jnp.int32))
 
-        # per-SSM catch-up (fill c_gamma hole) + rollback on draft pools
+        # per-SSM catch-up (fill the c_k hole) + rollback on draft pools
         for j, pool in enumerate(self.ssm_pools):
             if not pool.row_of:
                 continue
             pl = jnp.asarray(pool.lengths, jnp.int32)
-            outs_j = np.zeros((pool.capacity, gamma + 1), np.int32)
+            outs_j = np.zeros((pool.capacity, W + 1), np.int32)
             nacc_j = np.zeros(pool.capacity, np.int64)
             for rid, row in pool.row_of.items():
                 lrow = self.llm_pool.row_of.get(rid)
@@ -668,17 +747,17 @@ class SpinEngine:
                     pool.cache, jnp.asarray(outs_j), pl + 1, bt)
                 pool.invalidate_span(
                     pl + 2 + jnp.asarray(nacc_j, jnp.int32),
-                    pl + gamma + 3, W=gamma + 1)
+                    pl + W + 3, W=W + 1)
             else:
                 _, pool.cache = self.ssms[j].decode(
                     pool.cache, jnp.asarray(outs_j), pl + 1)
                 pool.cache = sd.invalidate_slots_jit(
                     pool.cache, pl + 2 + jnp.asarray(nacc_j, jnp.int32),
-                    pl + gamma + 3)
+                    pl + W + 3)
 
         # update lengths / last tokens on pools
         n_acc = np.zeros(len(ids), np.int64)
-        out = np.zeros((len(ids), gamma + 1), np.int64)
+        out = np.zeros((len(ids), W + 1), np.int64)
         out_len = np.zeros(len(ids), np.int64)
         for i, (rid, row) in enumerate(zip(ids, rows)):
             n_acc[i] = int(n_acc_all[row])
@@ -692,30 +771,28 @@ class SpinEngine:
             self.ssm_pools[j].last_token[srow] = out[i, n_acc[i]]
         return n_acc, out, out_len
 
-    def _verify_packed(self, cand, lengths, last):
-        """Packed verification via request decomposition (§V-A).  Paged:
-        the packed KV is the cohort's live blocks, gathered fragment-by-
-        fragment from the pool — no flat packed copy, no padded grid."""
-        gamma = self.ecfg.gamma
+    def _verify_packed(self, cand, lengths, last, W: int):
+        """Packed verification via request decomposition (§V-A) at the
+        slot's max granted depth W.  Paged: the packed KV is the cohort's
+        live blocks, gathered fragment-by-fragment from the pool — no flat
+        packed copy, no padded grid."""
         N = self.llm_pool.capacity
         if self.paged:
             bt, _ = self.llm_pool.block_table_array()
             ids_np, owner_np = self.llm_pool.live_blocks()
-            q_rows = np.repeat(np.arange(N, dtype=np.int32), gamma + 1)
-            offs = np.tile(np.arange(gamma + 1, dtype=np.int32), N)
             lens_np = np.asarray(self.llm_pool.lengths, np.int64)
-            q_pos = (lens_np[q_rows] + offs).astype(np.int32)[None]
-            q_seg = q_rows[None]
-            inp = jnp.concatenate([last, cand], axis=1)   # (N, gamma+1)
+            q_rows, q_pos, q_seg = D.build_query_layout(lens_np, W)
+            inp = jnp.concatenate([last, cand], axis=1)   # (N, W+1)
             logits, cache = self.llm.verify_paged(
-                self.llm_pool.cache, inp.reshape(1, -1), jnp.asarray(q_pos),
+                self.llm_pool.cache, inp.reshape(1, -1),
+                jnp.asarray(q_pos.astype(np.int32)),
                 jnp.asarray(q_seg), jnp.asarray(q_rows), bt,
                 jnp.asarray(ids_np), jnp.asarray(owner_np))
             self.llm_pool.cache = cache
-            return logits[0].reshape(N, gamma + 1, -1)
+            return logits[0].reshape(N, W + 1, -1)
         lens_np = np.maximum(np.asarray(lengths), 1)
         plan = D.plan_decomposition(
-            [int(l) for l in lens_np],
+            [int(n) for n in lens_np],
             align=min(128, _bucket(int(lens_np.max()), 16)))
         # bucket the packed size to bound retraces
         total_b = _bucket(plan.total, self.ecfg.packed_bucket)
@@ -727,18 +804,18 @@ class SpinEngine:
         valid[:plan.total] = plan.valid
         self.last_plan = plan
         q_rows, q_pos, q_seg = D.build_query_layout(
-            [int(l) for l in lens_np], gamma)
+            [int(n) for n in lens_np], W)
         override = D.make_attn_override(gb, gs, valid, q_rows)
-        inp = jnp.concatenate([last, cand], axis=1)          # (N, gamma+1)
+        inp = jnp.concatenate([last, cand], axis=1)          # (N, W+1)
         tokens_flat = inp.reshape(1, -1)
         logits, cache = T.verify_step_packed(
             self.llm.params, self.llm.cfg, self.llm_pool.cache,
             tokens=tokens_flat, positions=jnp.asarray(q_pos),
             segments=jnp.asarray(q_seg), attn_override=override)
         self.llm_pool.cache = cache
-        return logits[0].reshape(N, gamma + 1, -1)
+        return logits[0].reshape(N, W + 1, -1)
 
-    def _kv_cells_per_ssm(self, assign, ids):
+    def _kv_cells_per_ssm(self, assign, ids, depths):
         """Attended KV cells per request, per SSM, for the timing model.
 
         Continuous batching makes per-slot batches ragged: requests on one
@@ -747,9 +824,9 @@ class SpinEngine:
         SSM); packed verification attends each request's true context,
         normalised so the total matches the decomposition plan's packed
         cell count (alignment overhead included)."""
-        gamma = self.ecfg.gamma
         if not ids:
             return 0.0
+        gamma = max(depths[rid] for rid in ids)
         if self.paged:
             # attended cells are block-granular: a request costs its
             # allocated blocks (live context rounded up to whole blocks)
@@ -774,21 +851,23 @@ class SpinEngine:
             cells.append(float(np.mean(vals)) if vals else 0.0)
         return cells
 
-    def _accept_rates_per_ssm(self, assign, ids, n_acc):
+    def _accept_rates_per_ssm(self, assign, ids, n_acc, depths):
         rates = []
         for j in range(len(self.ssms)):
-            vals = [n_acc[i] / self.ecfg.gamma for i, rid in enumerate(ids)
+            vals = [n_acc[i] / depths[rid] for i, rid in enumerate(ids)
                     if assign.get(rid) == j]
             rates.append(float(np.mean(vals)) if vals else 0.5)
         return rates
 
     def _simulate_slot(self, per_ssm_batch, mb, kv_cells_per_req=0.0,
-                       prefill_time: float = 0.0) -> P.SimResult:
+                       prefill_time: float = 0.0,
+                       depth_per_req=None) -> P.SimResult:
         cost = self.cost
         if self.ecfg.straggler_mitigation:
             cost = self._with_straggler_mitigation(cost, per_ssm_batch)
         return P.simulate(cost, per_ssm_batch, mb, kv_cells_per_req,
-                          prefill_time=prefill_time)
+                          prefill_time=prefill_time,
+                          depth_per_req=depth_per_req)
 
     def _with_straggler_mitigation(self, cost, per_ssm_batch):
         """Inject random stragglers; mitigation re-dispatches the straggling
@@ -827,6 +906,7 @@ class SpinEngine:
             "kv_blocks": (self.llm_pool.num_blocks if self.paged else None),
             "prefill_chunk": (self.ecfg.prefill_chunk if self.chunked
                               else 0),
+            "gamma": self.gamma_ctl.stats,
             "accepted_tokens": self.accepted_tokens,
             "prefill_tokens": self.prefill_tokens_total,
             "sim_time": self.sim_time,

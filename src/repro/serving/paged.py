@@ -31,7 +31,6 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import config as C

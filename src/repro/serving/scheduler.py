@@ -70,7 +70,11 @@ class SchedulerConfig:
     arguments."""
     capacity: int                      # LLM pool rows
     max_len: int = 256
-    gamma: int = 4                     # speculation window (KV headroom)
+    # maximum speculation window (KV headroom + default decode-token cost).
+    # With the adaptive gamma controller this is ``gamma_max``: admission
+    # reserves the worst-case window, while the *per-slot token budget* is
+    # costed from the actually-granted depths (``set_decode_depths``).
+    gamma: int = 4
     kv_budget: Optional[int] = None    # total KV cells; None -> cap*max_len
     policy: str = "continuous"
     min_running: int = 1               # never preempt below this
@@ -140,6 +144,16 @@ class ContinuousScheduler:
         self.prefill_tokens = 0            # prompt tokens granted in chunks
         self._wait_since: Dict[int, float] = {}   # rid -> enqueue clock
         self.queue_wait = 0.0              # total waiting-time accumulated
+        # per-request granted speculation depths (gamma controller); the
+        # token-budget split costs each decode slot at its actual depth
+        # instead of a uniform gamma+1.  Missing entries (fresh admits
+        # before any grant) fall back to cfg.gamma.
+        self.decode_depths: Dict[int, int] = {}
+        self.decode_tokens_planned = 0     # Σ (k_i + 1) over planned slots
+        # prompt tokens granted by the CURRENT slot's chunk plan; the
+        # gamma controller reads this so its depth cap charges the actual
+        # prefill work sharing this slot's token budget
+        self.last_prefill_granted = 0
 
     # ----------------------------------------------------------- intake --
     def submit(self, reqs: Sequence[Request]):
@@ -200,6 +214,7 @@ class ContinuousScheduler:
         dec = self._plan_continuous()
         if grant_prefill and self.cfg.prefill_chunk > 0:
             dec.prefill = self._plan_chunks(dec)
+            self.last_prefill_granted = sum(n for _, n in dec.prefill)
         return dec
 
     def _plan_static(self) -> Decision:
@@ -238,23 +253,40 @@ class ContinuousScheduler:
             demand += self.kv_need(r)
         return Decision(admit=admit, preempt=preempt)
 
+    def set_decode_depths(self, depths: Dict[int, int]):
+        """Engine acknowledgement of the gamma controller's grants: the
+        speculation depth each running request will draft next slot.  The
+        token-budget split charges each decode slot ``k_i + 1`` LLM query
+        tokens (its drafts + the bonus/correction token) instead of the
+        uniform worst case, so shallow grants free budget for prompt
+        chunks."""
+        self.decode_depths = dict(depths)
+
+    def decode_cost(self, rid: int) -> int:
+        """Planned LLM query tokens of one decode slot: granted depth + 1
+        (fixed policy / fresh admits: cfg.gamma + 1)."""
+        return self.decode_depths.get(rid, self.cfg.gamma) + 1
+
     def _plan_chunks(self, dec: Decision) -> List[Tuple[Request, int]]:
         """Split this slot's token budget between decode slots and prompt
-        chunks.  Decode comes first (every decode-active request costs
-        gamma+1 query tokens); the remainder goes to prefilling requests in
-        rank order, capped at ``prefill_chunk`` tokens each.  When nothing
-        is decode-active, the top-ranked prefilling request is granted a
-        chunk unconditionally — an otherwise-idle slot must make progress."""
+        chunks.  Decode comes first (every decode-active request costs its
+        granted depth + 1 query tokens); the remainder goes to prefilling
+        requests in rank order, capped at ``prefill_chunk`` tokens each.
+        When nothing is decode-active, the top-ranked prefilling request is
+        granted a chunk unconditionally — an otherwise-idle slot must make
+        progress."""
         victims = {r.rid for r in dec.preempt}
         cands = sorted(
             [r for rid, r in self.prefilling.items() if rid not in victims]
             + list(dec.admit), key=_rank)
-        n_decode = (len(self.running) - len(victims)
-                    - sum(1 for rid in self.prefilling if rid not in victims))
+        decoders = [rid for rid in self.running
+                    if rid not in victims and rid not in self.prefilling]
+        n_decode = len(decoders)
+        decode_tokens = sum(self.decode_cost(rid) for rid in decoders)
+        self.decode_tokens_planned += decode_tokens
         left: Optional[int] = None
         if self.cfg.token_budget is not None:
-            left = max(0, self.cfg.token_budget
-                       - n_decode * (self.cfg.gamma + 1))
+            left = max(0, self.cfg.token_budget - decode_tokens)
         grants: List[Tuple[Request, int]] = []
         for r in cands:
             remaining = self.prefill_target(r) - r.prefill_pos
@@ -300,6 +332,7 @@ class ContinuousScheduler:
         same priority class."""
         self.running.pop(r.rid, None)
         self.prefilling.pop(r.rid, None)
+        self.decode_depths.pop(r.rid, None)
         r.prefill_pos = 0
         r.preemptions += 1
         self.preemptions += 1
@@ -308,6 +341,7 @@ class ContinuousScheduler:
 
     def mark_finished(self, rid: int):
         self.running.pop(rid, None)
+        self.decode_depths.pop(rid, None)
         self.finished.append(rid)
 
     # ------------------------------------------------------------ stats --
@@ -323,4 +357,5 @@ class ContinuousScheduler:
             "prefill_chunk": self.cfg.prefill_chunk,
             "prefill_grants": self.prefill_grants,
             "prefill_tokens": self.prefill_tokens,
+            "decode_tokens_planned": self.decode_tokens_planned,
         }

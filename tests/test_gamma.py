@@ -1,0 +1,294 @@
+"""Goodput-aware speculation depth (core/gamma.py + engine integration).
+
+Controller properties (monotonicity in the acceptance estimate, clamping,
+load-aware capping), scheduler token-budget accounting with ragged
+depths, and the engine-level contracts: ``fixed`` emits exactly the seed
+outputs (== plain LLM greedy) on both KV layouts, and ``adaptive`` stays
+lossless while changing only the speculation schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypcompat import HAVE_HYPOTHESIS, given, settings, st
+from repro.configs import registry
+from repro.core import spec_decode as sd
+from repro.core.decompose import build_query_layout
+from repro.core.gamma import GammaConfig, GammaController, expected_tokens
+from repro.core.pipeline import CostModel
+from repro.core.selector import LBSS, SelectorConfig
+from repro.data.workloads import Request, make_workload
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, SpinEngine
+from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
+
+VOCAB = 256
+
+
+def _cost(n_ssms=2, gamma=4):
+    return CostModel(
+        ssm_time_per_token=[1e-4 * (j + 1) for j in range(n_ssms)],
+        ssm_fixed=[2e-4] * n_ssms,
+        llm_fixed=1e-3,
+        llm_time_per_token=5e-4,
+        gamma=gamma,
+    )
+
+
+def _controller(policy="adaptive", gamma=4, gamma_max=8, selector=None):
+    return GammaController(
+        GammaConfig(policy=policy, gamma=gamma, gamma_max=gamma_max),
+        _cost(gamma=gamma),
+        selector,
+    )
+
+
+# ------------------------------------------------------------ controller --
+
+
+def test_expected_tokens_closed_form():
+    # a=0: always exactly the bonus token; a=1: everything + bonus
+    assert expected_tokens(0.0, 5) == pytest.approx(1.0)
+    assert expected_tokens(1.0, 5) == pytest.approx(6.0)
+    # geometric series against a direct sum
+    a, k = 0.6, 4
+    direct = sum(a**i for i in range(k + 1))
+    assert expected_tokens(a, k) == pytest.approx(direct)
+
+
+def test_best_depth_clamped_and_monotone_on_grid():
+    ctl = _controller(gamma_max=8)
+    depths = [ctl.best_depth(a, 0) for a in np.linspace(0.0, 1.0, 101)]
+    assert all(1 <= k <= 8 for k in depths)
+    assert depths == sorted(depths), "depth must be monotone in acceptance"
+    assert depths[0] == 1, "hopeless drafts deserve minimum depth"
+    assert depths[-1] == 8, "perfect drafts deserve the full window"
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=60, deadline=None)
+@given(
+    a1=st.floats(min_value=0.0, max_value=1.0),
+    a2=st.floats(min_value=0.0, max_value=1.0),
+    gamma_max=st.integers(min_value=1, max_value=12),
+)
+def test_best_depth_monotone_and_clamped_property(a1, a2, gamma_max):
+    ctl = _controller(gamma_max=gamma_max)
+    k1, k2 = ctl.best_depth(a1, 0), ctl.best_depth(a2, 0)
+    assert 1 <= k1 <= gamma_max and 1 <= k2 <= gamma_max
+    lo, hi = (k1, k2) if a1 <= a2 else (k2, k1)
+    assert lo <= hi, f"depth not monotone: a=({a1}, {a2}) -> k=({k1}, {k2})"
+
+
+def test_adaptive_cold_start_grants_default_gamma():
+    # no selector / no observations: --gamma is the cold-start depth
+    ctl = _controller(gamma=3, gamma_max=8)
+    assert ctl.grant([1, 2], {1: 0, 2: 1}) == {1: 3, 2: 3}
+    # clamped to the cap when gamma > gamma_max
+    ctl = _controller(gamma=6, gamma_max=4)
+    assert ctl.grant([1], {1: 0}) == {1: 4}
+
+
+def test_fixed_policy_grants_uniform_gamma_and_ignores_budget():
+    ctl = _controller(policy="fixed", gamma=4, gamma_max=4)
+    got = ctl.grant([7, 8, 9], {7: 0, 8: 1, 9: 0}, token_budget=3, reserved_tokens=16)
+    assert got == {7: 4, 8: 4, 9: 4}
+    assert ctl.capped == 0
+
+
+def test_adaptive_budget_cap_trims_deepest_first_and_keeps_floor():
+    sel = LBSS(SelectorConfig(n_ssms=1, batch_limits=[8]))
+    for _ in range(4):
+        sel.observe_accept(1, 0, 1.0)
+        sel.observe_accept(2, 0, 1.0)
+    ctl = _controller(gamma_max=8, selector=sel)
+    free = ctl.grant([1, 2], {1: 0, 2: 0})
+    assert free == {1: 8, 2: 8}
+    # contended budget: 12 tokens minus 6 already granted to a prefill
+    # chunk leaves 6 = exactly depth-1-plus-bonus for each request — and
+    # grants are never trimmed below depth 1
+    capped = ctl.grant([1, 2], {1: 0, 2: 0}, token_budget=12, reserved_tokens=6)
+    assert sum(k + 1 for k in capped.values()) <= 6
+    assert all(k >= 1 for k in capped.values())
+    assert ctl.capped > 0
+
+
+def test_controller_uses_selector_acceptance_estimates():
+    sel = LBSS(SelectorConfig(n_ssms=2, batch_limits=[4, 4]))
+    for _ in range(8):
+        sel.observe_accept(1, 0, 1.0)
+        sel.observe_accept(2, 1, 0.0)
+    ctl = _controller(gamma_max=8, selector=sel)
+    got = ctl.grant([1, 2], {1: 0, 2: 1})
+    assert got[1] == 8 and got[2] == 1
+    # estimates are shared within a group and survive retire()
+    sel.retire(1)
+    assert sel.accept_estimate(1, 0) == pytest.approx(1.0)
+
+
+def test_ragged_query_layout_matches_uniform_and_counts_tokens():
+    lens = [5, 9, 3]
+    u_rows, u_pos, u_seg = build_query_layout(lens, 3)
+    r_rows, r_pos, r_seg = build_query_layout(lens, [3, 3, 3])
+    assert np.array_equal(u_rows, r_rows)
+    assert np.array_equal(u_pos, r_pos)
+    assert np.array_equal(u_seg, r_seg)
+    rows, pos, seg = build_query_layout(lens, [1, 4, 2])
+    assert rows.shape[0] == (1 + 1) + (4 + 1) + (2 + 1)
+    assert list(rows) == [0, 0, 1, 1, 1, 1, 1, 2, 2, 2]
+    assert list(pos[0]) == [5, 6, 9, 10, 11, 12, 13, 3, 4, 5]
+    with pytest.raises(ValueError):
+        build_query_layout(lens, [1, 2])
+
+
+# ----------------------------------------------- scheduler token budget --
+
+
+def _req(rid, arrival=0.0, prompt_len=40, max_new=8):
+    return Request(
+        rid=rid,
+        dataset="cip",
+        difficulty=0.5,
+        prompt=np.zeros(prompt_len, np.int32),
+        max_new=max_new,
+        arrival=arrival,
+        emitted=[],
+    )
+
+
+def test_token_budget_split_uses_granted_depths():
+    """Ragged depths: shallow decode grants must free budget for prompt
+    chunks, deep grants must consume it — at the uniform worst case the
+    split degrades to the old n_decode * (gamma + 1)."""
+    cfg = SchedulerConfig(
+        capacity=4, max_len=128, gamma=4, prefill_chunk=16, token_budget=24
+    )
+    s = ContinuousScheduler(cfg)
+    a, b = _req(0), _req(1)
+    s.submit([a, b])
+    for r in s.plan(0.0).admit:
+        s.mark_admitted(r, 0.0)
+    s.mark_prefill_done(a)
+    s.mark_prefill_done(b)
+    # a third request arrives and starts prefilling
+    c = _req(2, arrival=1.0, prompt_len=60)
+    s.submit([c])
+    dec = s.plan(1.0)
+    assert [r.rid for r in dec.admit] == [2]
+    s.mark_admitted(c, 1.0)
+    # no grants yet -> uniform worst case: 2 decoders cost 2 * (4+1) = 10
+    # of the 24-token budget, leaving a 14-token chunk for c
+    assert dec.prefill == [(c, 14)]
+    # shallow grants (depth 1 each) cost 2 * 2 = 4, leaving 20 -> the
+    # chunk cap (16) binds instead of the budget
+    s.set_decode_depths({0: 1, 1: 1})
+    dec = s.plan(2.0)
+    assert dec.prefill == [(c, 16)]
+    # deep grants eat the whole budget: decode 2 * (11+1) = 24 -> chunk
+    # denied this slot (decode still advances)
+    s.set_decode_depths({0: 11, 1: 11})
+    dec = s.plan(3.0)
+    assert dec.prefill == []
+    assert s.decode_cost(0) == 12 and s.decode_cost(2) == cfg.gamma + 1
+
+
+# ------------------------------------------------------- engine contract --
+
+
+@pytest.fixture(scope="module")
+def models():
+    key = jax.random.PRNGKey(0)
+    cfg_llm = registry.reduced_for(
+        "llama-7b", d_model=96, n_heads=4, n_kv_heads=4, vocab_size=VOCAB
+    )
+    llm = sd.Bundle(cfg_llm, T.init_params(cfg_llm, key))
+    ssms = []
+    for i, (d, L) in enumerate([(32, 1), (64, 2)]):
+        c = registry.reduced_for(
+            "llama-68m",
+            d_model=d,
+            n_heads=4,
+            n_kv_heads=4,
+            vocab_size=VOCAB,
+            n_layers=L,
+        )
+        ssms.append(sd.Bundle(c, T.init_params(c, jax.random.PRNGKey(i + 1))))
+    return llm, ssms
+
+
+def greedy_reference(llm, prompt, n_new):
+    P = len(prompt)
+    toks = jnp.asarray(np.asarray(prompt, np.int32))[None]
+    lg, cache = llm.prefill(toks, jnp.asarray([P], jnp.int32), P + n_new + 8)
+    V = llm.cfg.vocab_size
+    tok = jnp.argmax(lg[:, P - 1, :V], -1, keepdims=True).astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    lengths = jnp.asarray([P], jnp.int32)
+    for _ in range(n_new - 1):
+        lg2, cache = llm.decode(cache, tok, lengths)
+        tok = jnp.argmax(lg2[:, -1, :V], -1, keepdims=True).astype(jnp.int32)
+        lengths = lengths + 1
+        out.append(int(tok[0, 0]))
+    return out
+
+
+def _run(llm, ssms, **kw):
+    sel = LBSS(
+        SelectorConfig(n_ssms=len(ssms), batch_limits=[5, 5], alpha=4, beta=2, seed=1)
+    )
+    defaults = dict(
+        gamma=3, max_len=128, capacity=5, packed_bucket=128, straggler_mitigation=False
+    )
+    defaults.update(kw)
+    eng = SpinEngine(llm, ssms, sel, EngineConfig(**defaults))
+    reqs = make_workload("mix", 5, VOCAB, seed=3, scale=0.25)
+    eng.add_requests(reqs)
+    eng.run(max_slots=120)
+    assert all(r.done for r in eng.requests.values())
+    return eng
+
+
+def _assert_greedy_exact(llm, eng):
+    for r in eng.requests.values():
+        n = r.max_new
+        assert r.emitted[:n] == greedy_reference(llm, r.prompt, n), r.rid
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_fixed_policy_emits_seed_outputs_token_for_token(models, layout):
+    """--gamma-policy fixed must reproduce the pre-controller engine
+    exactly, which in turn equals plain LLM greedy decoding."""
+    llm, ssms = models
+    eng = _run(llm, ssms, gamma_policy="fixed", kv_layout=layout)
+    assert eng.gamma_max == 3
+    _assert_greedy_exact(llm, eng)
+    st = eng.gamma_ctl.stats
+    assert set(st["depth_hist"]) == {3}, "fixed must grant gamma uniformly"
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_adaptive_policy_is_lossless_both_layouts(models, layout):
+    """Whatever depths the controller grants, greedy spec decoding must
+    still emit exactly the LLM's own continuation."""
+    llm, ssms = models
+    eng = _run(llm, ssms, gamma_policy="adaptive", gamma_max=6, kv_layout=layout)
+    _assert_greedy_exact(llm, eng)
+    st = eng.gamma_ctl.stats
+    assert all(1 <= k <= 6 for k in st["depth_hist"])
+    assert st["grants"] > 0 and st["mean_depth"] >= 1.0
+
+
+def test_adaptive_lossless_with_chunked_prefill_and_budget(models):
+    llm, ssms = models
+    eng = _run(
+        llm,
+        ssms,
+        gamma_policy="adaptive",
+        gamma_max=6,
+        prefill_chunk=8,
+        token_budget=30,
+    )
+    _assert_greedy_exact(llm, eng)
+    assert eng.scheduler.stats["prefill_grants"] > 0

@@ -76,12 +76,14 @@ def test_prefill_decode_matches_full_forward(arch):
     if cfg.embed_inputs:
         kw_full = {"tokens": toks}
         kw_pre = {"tokens": toks[:, :P]}
-        step_kw = lambda t: {"tokens": toks[:, t:t + 1]}
+        def step_kw(t):
+            return {"tokens": toks[:, t:t + 1]}
     else:
         emb = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
         kw_full = {"inputs_embeds": emb}
         kw_pre = {"inputs_embeds": emb[:, :P]}
-        step_kw = lambda t: {"inputs_embeds": emb[:, t:t + 1]}
+        def step_kw(t):
+            return {"inputs_embeds": emb[:, t:t + 1]}
     full_logits, _ = T.apply(params, cfg, **kw_full)
     logits_p, cache = T.prefill(params, cfg, max_len=S, **kw_pre)
     np.testing.assert_allclose(np.asarray(logits_p[:, P - 1]),

@@ -57,7 +57,6 @@ def _fragmented_tables(lens, bs, num_blocks, seed=0):
     ([129], 8, 2, 64, 32),             # single-token tail block
 ])
 def test_paged_decode_matches_oracle(lens, H, Kh, D, bs, dtype):
-    rng = np.random.default_rng(1)
     nb_total = sum(max(1, -(-l // bs)) for l in lens) + 3
     bt = _fragmented_tables(lens, bs, nb_total, seed=2)
     B = len(lens)

@@ -1,11 +1,9 @@
 """Micro-batch pipeline (paper §V-B): simulator invariants + heuristic."""
 
 import numpy as np
-import pytest
 
 from repro.core.pipeline import (CostModel, choose_micro_batches,
-                                 goodput_estimate, simulate,
-                                 sweep_micro_batches)
+                                 simulate, sweep_micro_batches)
 
 
 def hetero_cost(gamma=4):

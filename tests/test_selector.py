@@ -1,11 +1,8 @@
 """LBSS selector (paper §IV): matching optimality, batch caps, chunked
 exploration, empirical O(log T)-style regret, baseline comparison."""
 
-import math
-import random
 
 import numpy as np
-import pytest
 
 from repro.core.selector import (LBSS, EpsilonGreedy, GreedyPromptLength,
                                  SelectorConfig, km_match)

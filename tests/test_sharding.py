@@ -62,8 +62,9 @@ def test_full_param_sharding_tree_covers_every_leaf(arch):
     ab = T.abstract_params(cfg)
     ax = T.logical_axes(cfg)
     flat_ab = jax.tree.leaves(ab)
-    is_axes = lambda a: isinstance(a, tuple) and all(
-        isinstance(e, (str, type(None))) for e in a)
+    def is_axes(a):
+        return isinstance(a, tuple) and all(
+            isinstance(e, (str, type(None))) for e in a)
     flat_ax = jax.tree.leaves(ax, is_leaf=is_axes)
     assert len(flat_ab) == len(flat_ax)
     for leaf, axes in zip(flat_ab, flat_ax):

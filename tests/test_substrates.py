@@ -10,7 +10,7 @@ import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import TokenStream
-from repro.data.workloads import DATASETS, make_workload
+from repro.data.workloads import make_workload
 from repro.distributed.collectives import (dequantize_int8, quantize_int8,
                                            topk_sparsify)
 from repro.optim import AdamW, cosine_schedule
