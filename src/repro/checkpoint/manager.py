@@ -64,10 +64,14 @@ class CheckpointManager:
             raise RuntimeError(f"checkpoint save failed after "
                                f"{max_retries} retries")
 
+        # a still-running async save may be writing this very step's tmp
+        # dir (e.g. the loop's periodic async save of the final step
+        # followed by the shutdown blocking save): serialize with it
+        # first, or the two writers race on rmtree/makedirs/replace
+        self.wait()
         if blocking:
             _write()
         else:
-            self.wait()
             self._thread = threading.Thread(target=_write, daemon=True)
             self._thread.start()
 

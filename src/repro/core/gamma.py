@@ -36,6 +36,29 @@ decode-active request each slot:
 
 The ``fixed`` policy returns ``cfg.gamma`` for every request
 unconditionally and is bit-identical to the pre-controller engine.
+
+Invariants (previously stated only in PR descriptions):
+
+* **Grant bounds** — every granted depth satisfies
+  ``1 <= k_i <= gamma_max``: depth 1 is the progress floor (each slot
+  still commits >= 1 token per request), ``gamma_max`` is the worst case
+  everything else reserves.
+* **KV margins** — a depth-``k_i`` slot writes speculative KV at exactly
+  ``[ctx, ctx + k_i + 1)`` (drafts + bonus token); the engine grows /
+  scrubs per-row windows at ``ctx + k_i + 1``, while admission, pool
+  sizing, switch-precompute widths and the scheduler's ``kv_need`` all
+  reserve ``ctx + gamma_max + 1`` — a grant can never make an admitted
+  request overflow its reservation.
+* **Budget currency** — ``token_budget`` / ``reserved_tokens`` are LLM
+  query tokens per slot: a decode slot costs ``k_i + 1``, this slot's
+  already-granted prompt chunks cost ``reserved_tokens``, and the cap
+  trims the deepest grants (deterministically: max depth, ties by rid)
+  until the sum fits — the same currency the scheduler's step planner
+  spends (``decode_cost``).
+* **Losslessness** — depth only moves *when* tokens commit, never
+  *which*: greedy speculative decoding emits the LLM's own continuation
+  at any depth (tests/test_gamma.py, bench_gamma.py assert
+  token-for-token equality between policies).
 """
 
 from __future__ import annotations

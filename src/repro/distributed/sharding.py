@@ -251,3 +251,23 @@ def sharding_tree(mesh: Mesh, rules: Rules, axes_tree, abstract_tree):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, PartitionSpec())
+
+
+def replica_sharding_trees(submeshes: Sequence[Mesh], rules: Rules,
+                           axes_tree, abstract_tree) -> List:
+    """Per-replica NamedSharding pytrees for multi-replica serving: the
+    same rule table applied over each replica's sub-mesh (from
+    ``launch.mesh.replica_submeshes``).  Rule tables never name the
+    ``replica`` axis — replicas are full parameter copies, and each
+    sub-mesh only exposes the remaining axes, so divisibility checks and
+    axis assignment behave exactly as on a single-replica mesh.  Placing
+    one copy of the params with each returned tree materialises the
+    replicated-over-replica layout without any cross-replica collective.
+    """
+    for m in submeshes:
+        if "replica" in m.shape:
+            raise ValueError(
+                "sub-mesh still carries a 'replica' axis — carve with "
+                "launch.mesh.replica_submeshes before building shardings")
+    return [sharding_tree(m, rules, axes_tree, abstract_tree)
+            for m in submeshes]

@@ -8,19 +8,65 @@ Topology: TPU v5e pods of 16x16 = 256 chips.  Single pod: (data=16,
 model=16) — ICI on both axes.  Multi-pod: leading `pod` axis (size 2 here;
 scales to N pods) mapped over DCN, used for data parallelism with optional
 gradient compression (distributed/collectives.py).
+
+Multi-replica serving adds a leading ``replica`` axis: each index along
+it is one full serving cell — an independent SpinEngine whose LLM is
+sharded over that slice's remaining (data, model) axes.  The replica
+axis carries NO collectives (replicas never communicate; the router in
+serving/router.py balances the request stream between them), so it maps
+over DCN for free.  ``replica_submeshes`` carves the per-replica
+sub-meshes; the existing rule tables in distributed/sharding.py apply
+unchanged because the replica axis never appears inside a sub-mesh.
 """
 
 from __future__ import annotations
 
+from typing import List, Tuple
+
 import jax
+import numpy as np
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, replicas: int = 1):
+    shape: Tuple[int, ...] = (2, 16, 16) if multi_pod else (16, 16)
+    axes: Tuple[str, ...] = (("pod", "data", "model") if multi_pod
+                             else ("data", "model"))
+    if replicas > 1:
+        shape = (replicas,) + shape
+        axes = ("replica",) + axes
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh(data: int = 1, model: int = 1):
+def make_local_mesh(data: int = 1, model: int = 1, replicas: int = 1):
     """Small mesh over whatever devices exist (CPU tests / examples)."""
+    if replicas > 1:
+        return jax.make_mesh((replicas, data, model),
+                             ("replica", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def carve_replica_axis(devices: np.ndarray, axis_names: Tuple[str, ...]
+                       ) -> Tuple[List[np.ndarray], Tuple[str, ...]]:
+    """Split a mesh's device array along its ``replica`` axis: one device
+    sub-array per replica, plus the axis names that remain.  Pure array
+    logic (unit-testable without multi-device jax); without a replica
+    axis the whole array is the single replica's."""
+    if "replica" not in axis_names:
+        return [devices], tuple(axis_names)
+    ax = list(axis_names).index("replica")
+    moved = np.moveaxis(np.asarray(devices), ax, 0)
+    names = tuple(n for n in axis_names if n != "replica")
+    return [moved[i] for i in range(moved.shape[0])], names
+
+
+def replica_submeshes(mesh) -> List[jax.sharding.Mesh]:
+    """One sub-mesh per index of the mesh's ``replica`` axis (the whole
+    mesh if it has none).  Each sub-mesh keeps the remaining axes, so
+    serve/train rule tables resolve against it exactly as on a
+    single-replica mesh — replicas are full parameter copies, data
+    parallel over the replica axis by construction."""
+    parts, names = carve_replica_axis(np.asarray(mesh.devices),
+                                      tuple(mesh.axis_names))
+    if len(parts) == 1 and "replica" not in mesh.axis_names:
+        return [mesh]
+    return [jax.sharding.Mesh(p, names) for p in parts]

@@ -3,7 +3,8 @@
     python -m repro.launch.serve --dataset mix --requests 16 \
         --selector lbss --gamma 4 [--no-packed] [--no-pipeline] \
         [--arrival-rate 200] [--kv-budget 512] [--scheduler continuous] \
-        [--kv-layout paged|dense] [--block-size 16]
+        [--kv-layout paged|dense] [--block-size 16] \
+        [--replicas 2 --router-policy lot]
 
 Builds the heterogeneous SSM zoo + LLM (reduced configs on CPU; the same
 code paths drive full configs on a pod, where ``--mesh`` places the LLM on
@@ -13,6 +14,13 @@ until the request stream drains.  ``--arrival-rate`` turns the workload
 into a streaming Poisson arrival process (requests/sec on the sim clock);
 without it every request arrives at t=0.  ``--scheduler static`` keeps the
 seed-style gang-scheduled cohort baseline for comparison.
+
+``--replicas N`` serves the stream through N independent engine replicas
+behind a router (serving/router.py): ``--capacity`` and ``--kv-budget``
+are *aggregate* figures split evenly across replicas, so a replica-count
+sweep compares at fixed total resources.  Every flag is documented with
+its defaults and interactions in docs/SERVING.md (CI keeps the two in
+sync — see tools/check_docs.py).
 """
 
 from __future__ import annotations
@@ -30,6 +38,7 @@ from repro.data.workloads import make_workload
 from repro.models import transformer as T
 from repro.models.config import reduced
 from repro.serving.engine import EngineConfig, SpinEngine
+from repro.serving.router import Router, RouterConfig
 
 
 def build_zoo(vocab: int, seed: int = 0, n_ssms: int = 3):
@@ -61,7 +70,17 @@ def make_selector(kind: str, n_ssms: int, cap: int, prompt_lens=None,
     raise ValueError(kind)
 
 
-def main(argv=None):
+def split_evenly(total: int, n: int):
+    """Split an aggregate resource into n near-equal shares (remainder
+    to the first replicas) — used so ``--capacity`` and ``--kv-budget``
+    stay *aggregate* figures under ``--replicas``.  Shares are zero when
+    ``total < n``; callers must validate that every replica gets a
+    usable share (serve.py errors out for both budgets)."""
+    base, rem = divmod(int(total), n)
+    return [base + (1 if i < rem else 0) for i in range(n)]
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="mix",
                     choices=["alpaca", "cp", "cip", "mix"])
@@ -117,6 +136,22 @@ def main(argv=None):
                     help="per-slot LLM query-token budget shared between "
                          "decode slots (gamma+1 tokens each) and prefill "
                          "chunks; default: unthrottled")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="independent engine replicas behind the router "
+                         "(serving/router.py); --capacity and --kv-budget "
+                         "are aggregate and split evenly across replicas")
+    ap.add_argument("--router-policy", default=None,
+                    choices=["lot", "p2c"],
+                    help="replica dispatch policy: lot = least outstanding "
+                         "tokens (default), p2c = power-of-two-choices on "
+                         "free KV blocks; passing this flag routes even a "
+                         "single replica through the router (bit-identical "
+                         "to the bare engine)")
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
     if args.block_size <= 0:
         ap.error("--block-size must be positive")
@@ -134,29 +169,60 @@ def main(argv=None):
                  "all-at-t=0 arrivals)")
     if args.capacity is not None and args.capacity <= 0:
         ap.error("--capacity must be positive")
+    if args.replicas <= 0:
+        ap.error("--replicas must be positive")
 
     llm, ssms = build_zoo(args.vocab, args.seed, args.n_ssms)
     reqs = make_workload(args.dataset, args.requests, args.vocab,
                          seed=args.seed, scale=args.scale,
                          arrival_rate=args.arrival_rate)
     capacity = args.capacity if args.capacity is not None else args.requests
-    sel = make_selector(args.selector, len(ssms), capacity,
-                        {r.rid: r.prompt_len for r in reqs}, args.seed,
-                        group_of={r.rid: r.dataset for r in reqs})
-    ecfg = EngineConfig(gamma=args.gamma, gamma_policy=args.gamma_policy,
-                        gamma_max=args.gamma_max, max_len=256,
-                        capacity=capacity,
-                        use_packed_verify=not args.no_packed,
-                        use_pipeline=not args.no_pipeline,
-                        scheduler_policy=args.scheduler,
-                        kv_budget=args.kv_budget,
-                        kv_layout=args.kv_layout,
-                        block_size=args.block_size,
-                        prefill_chunk=args.prefill_chunk,
-                        token_budget=args.token_budget)
-    eng = SpinEngine(llm, ssms, sel, ecfg)
-    eng.add_requests(reqs)
-    stats = eng.run(max_slots=args.max_slots)
+    n_rep = args.replicas
+    if n_rep > capacity:
+        ap.error(f"--replicas {n_rep} exceeds the aggregate --capacity "
+                 f"{capacity}: every replica needs at least one pool row")
+    if (n_rep > 1 and args.kv_budget is not None
+            and args.kv_budget < n_rep * args.block_size):
+        ap.error(f"--kv-budget {args.kv_budget} is below one "
+                 f"--block-size ({args.block_size}) block per replica: "
+                 "a zero-block share degenerates that replica to "
+                 "one-request-at-a-time service")
+
+    def make_engine(cap: int, kv_budget, seed: int) -> SpinEngine:
+        sel = make_selector(args.selector, len(ssms), cap,
+                            {r.rid: r.prompt_len for r in reqs}, seed,
+                            group_of={r.rid: r.dataset for r in reqs})
+        ecfg = EngineConfig(gamma=args.gamma, gamma_policy=args.gamma_policy,
+                            gamma_max=args.gamma_max, max_len=256,
+                            capacity=cap,
+                            use_packed_verify=not args.no_packed,
+                            use_pipeline=not args.no_pipeline,
+                            scheduler_policy=args.scheduler,
+                            kv_budget=kv_budget,
+                            kv_layout=args.kv_layout,
+                            block_size=args.block_size,
+                            prefill_chunk=args.prefill_chunk,
+                            token_budget=args.token_budget,
+                            seed=seed)
+        return SpinEngine(llm, ssms, sel, ecfg)
+
+    if n_rep > 1 or args.router_policy is not None:
+        # multi-replica path: aggregate capacity / KV budget split evenly;
+        # the zoo's Bundles (weights + jit caches) are shared, pools and
+        # selectors are per replica
+        caps = split_evenly(capacity, n_rep)
+        kvs = (split_evenly(args.kv_budget, n_rep)
+               if args.kv_budget is not None else [None] * n_rep)
+        engines = [make_engine(caps[i], kvs[i], args.seed)
+                   for i in range(n_rep)]
+        router = Router(engines, RouterConfig(
+            policy=args.router_policy or "lot", seed=args.seed))
+        router.submit(reqs)
+        stats = router.run(max_slots=args.max_slots)
+    else:
+        eng = make_engine(capacity, args.kv_budget, args.seed)
+        eng.add_requests(reqs)
+        stats = eng.run(max_slots=args.max_slots)
     print(json.dumps(stats, indent=2, default=str))
     return stats
 

@@ -1,8 +1,9 @@
 from repro.serving.engine import EngineConfig, SpinEngine
 from repro.serving.pool import DenseCachePool, PagedCachePool
+from repro.serving.router import Router, RouterConfig
 from repro.serving.scheduler import (ContinuousScheduler, Decision,
                                      SchedulerConfig)
 
 __all__ = ["EngineConfig", "SpinEngine", "ContinuousScheduler",
            "Decision", "SchedulerConfig", "DenseCachePool",
-           "PagedCachePool"]
+           "PagedCachePool", "Router", "RouterConfig"]

@@ -215,6 +215,47 @@ class SpinEngine:
         """Arrived-but-not-admitted requests (scheduler queue view)."""
         return self.scheduler.waiting
 
+    # ------------------------------------------------- replica-level view --
+    # Load/occupancy metrics the multi-replica router (serving/router.py)
+    # reads at dispatch time.  Cheap (no JAX work) and deterministic.
+    def outstanding_tokens(self) -> int:
+        """Token-denominated estimate of all work this engine still owes:
+        for every submitted-but-unfinished request, the context still to
+        ingest plus the output tokens still to emit."""
+        total = 0
+        pre = self.scheduler.prefilling
+        for r in self.scheduler.outstanding_requests():
+            emitted = len(r.emitted or [])
+            total += max(0, r.max_new - max(0, emitted - 1))
+            if r.rid in pre:
+                total += max(0,
+                             self.scheduler.prefill_target(r) - r.prefill_pos)
+            elif not self.llm_pool.has(r.rid):
+                # no row yet: the whole context must still be ingested
+                total += self.scheduler.prefill_target(r)
+        return total
+
+    def kv_free_cells(self) -> int:
+        """*Admissible* KV headroom in cells: the scheduler budget minus
+        the running set's projected demand — exactly what admission
+        checks.  Under paging this is additionally capped by the
+        physical free-block ledger; the pool's one-full-row
+        deadlock-freedom floor can hold blocks *above* the budget, and
+        that headroom is not admissible, so it must not attract p2c
+        dispatches."""
+        demand = sum(self.scheduler.kv_need(r)
+                     for r in self.scheduler.running.values())
+        free = max(0, self.scheduler.kv_budget - demand)
+        if self.paged:
+            free = min(free,
+                       self.llm_pool.free_blocks * self.ecfg.block_size)
+        return free
+
+    def kv_occupancy(self) -> float:
+        """Fraction of the admissible KV budget currently committed."""
+        budget = max(1, self.scheduler.kv_budget)
+        return 1.0 - self.kv_free_cells() / budget
+
     def add_requests(self, reqs: Sequence[Request]):
         """Submit requests.  Arrival timestamps on the requests are
         honoured: a request whose ``arrival`` lies in the simulated future

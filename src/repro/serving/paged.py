@@ -25,6 +25,28 @@ Entry points ``decode_step_paged`` / ``verify_step_paged`` wrap
 ``models.transformer`` with the right override; ``core.spec_decode.Bundle``
 jits them per model (block tables are *traced* arguments, so a step never
 retraces when the tables' contents change).
+
+Invariants this plumbing relies on (owned by ``serving/pool.py``,
+previously stated only in PR descriptions):
+
+* **Block ownership** — ``row_of`` is a bijection from live request ids
+  to pool rows, and each physical block belongs to at most one row's
+  table; ``free_blocks + Σ allocated == num_blocks`` after any
+  admit/evict/grow sequence (property-tested).  Rows not in ``row_of``
+  own no blocks, which is what makes static-shape writes safe: their
+  positions resolve out of range and the scatter drops them.
+* **Attendability** — a KV slot is readable only when its block is in a
+  live table AND its ``seg >= 0``; freshly allocated blocks are
+  seg-invalidated so a previous owner's data can never be attended.
+* **Speculation margin** — before decode/verify writes land, each
+  participating row's table covers ``ctx + k_i + 1`` cells (granted
+  depth + bonus token; draft pools add one more for the catch-up hole),
+  and rollback scrubs ``[ctx + 1 + n_acc, ctx + W + 1)`` so rejected
+  drafts are never attendable afterwards.
+* **Budget unit** — the pool holds ``kv_budget // block_size`` physical
+  blocks (plus the one-full-row deadlock-freedom floor); the scheduler
+  accounts demand in block-rounded cells, so "budget exceeded" and
+  "allocation fails" are the same event, not two models of it.
 """
 
 from __future__ import annotations

@@ -1,0 +1,268 @@
+"""Multi-replica serving: a router in front of N independent engines.
+
+SPIN is a serving system (§II; §VI evaluates under Poisson traffic), and
+one engine on one device mesh caps its throughput at whatever a single
+LLM verification queue can drain.  The scaling unit of this layer is the
+**replica**: an independent ``SpinEngine`` + ``ContinuousScheduler`` pair
+whose LLM parameters are sharded over a sub-mesh carved from the leading
+``replica`` axis of the serving mesh (``launch/mesh.py``
+``replica_submeshes``; shard specs come from the same rule tables in
+``distributed/sharding.py`` — the replica axis never appears inside a
+rule table, so each replica shards exactly like a single-mesh engine).
+Replicas share model *weights* (the ``Bundle`` objects — and therefore
+jit caches — may be shared freely; they are read-only) but own disjoint
+KV pools, selectors, schedulers and sim clocks.
+
+The ``Router`` owns the **global arrival stream**: requests are submitted
+to the router, not to an engine, and are handed to a replica at their
+arrival instant by a routing policy:
+
+* ``lot`` — **least outstanding tokens** (default): dispatch to the
+  replica owing the fewest total tokens (remaining context + remaining
+  output over everything queued/running there).  Greedy join-shortest-
+  queue in token currency.
+* ``p2c`` — **power of two choices on free KV blocks**: sample two
+  *distinct* replicas (seeded, deterministic) and dispatch to the one
+  with more free KV cells.  The classic load-balancing result: two
+  probes get most of the benefit of querying everyone, and probing
+  *memory* rather than queue length tracks the resource that actually
+  gates admission.
+
+Ties always break toward the lower replica index, so a dispatch trace is
+reproducible from (policy, seed, workload) alone.
+
+Co-simulation: each replica advances its own simulated clock, and the
+router always steps the replica that is furthest behind (min ``sim_time``
+among replicas with work, ties by index).  Pending arrivals are
+dispatched once the router clock — the lagging live replica's clock —
+reaches them, so a policy never reads replica state from *earlier* than
+the dispatch instant (replicas ahead of the lagging clock are read at
+their current, slightly later state — the co-simulation analogue of
+probing a remote replica whose telemetry is a beat ahead).  Because
+engines honour arrival timestamps internally, a dispatched request still
+queues inside its replica until that replica's clock reaches its
+arrival.
+
+With one replica every policy is the constant choice and the router adds
+nothing to the timeline: tokens, sim-clock metrics and scheduler counters
+are bit-identical to driving the bare engine directly
+(``tests/test_router.py``).  ``benchmarks/bench_router.py`` measures
+aggregate goodput scaling at a fixed total KV budget and compares the
+policies under skewed load.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.workloads import Request
+from repro.serving.engine import SpinEngine
+
+POLICIES = ("lot", "p2c")
+
+
+@dataclasses.dataclass(kw_only=True)
+class RouterConfig:
+    """Keyword-only like the other serving configs (fields are appended
+    as the router grows)."""
+
+    policy: str = "lot"
+    seed: int = 0          # p2c probe sampling (lot is sample-free)
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown router policy {self.policy!r}")
+
+
+class Router:
+    """Dispatches a global request stream across engine replicas.
+
+    ``submeshes`` / ``rules`` are optional: when given (one sub-mesh per
+    replica, from ``launch.mesh.replica_submeshes``, plus a
+    ``distributed.sharding`` rule table), every replica step runs inside
+    ``use_rules(submeshes[i], rules)`` so the model forward's sharding
+    constraints resolve against that replica's own device slice.  Without
+    them ``constrain`` is a no-op and the engines run single-device —
+    the CPU test path.
+    """
+
+    def __init__(self, engines: Sequence[SpinEngine],
+                 cfg: Optional[RouterConfig] = None, *,
+                 submeshes=None, rules=None):
+        if not engines:
+            raise ValueError("router needs at least one replica engine")
+        self.engines = list(engines)
+        self.cfg = cfg or RouterConfig()
+        if submeshes is not None and len(submeshes) != len(self.engines):
+            raise ValueError(
+                f"{len(submeshes)} sub-meshes for {len(self.engines)} "
+                "replicas — carve one per replica (launch.mesh."
+                "replica_submeshes)")
+        self.submeshes = submeshes
+        self.rules = rules
+        self._rng = np.random.default_rng(self.cfg.seed)
+        self._pending: List = []           # heap of (arrival, seq, Request)
+        self._seq = 0
+        self.dispatched_to: Dict[int, int] = {}       # rid -> replica
+        self._budget: Optional[List[int]] = None      # run()'s step budget
+        self.dispatch_count = [0] * len(self.engines)
+        self.peak_queue_depth = [0] * len(self.engines)
+        self.peak_kv_occupancy = [0.0] * len(self.engines)
+        self.steps = [0] * len(self.engines)
+
+    # ----------------------------------------------------------- intake --
+    def submit(self, reqs: Sequence[Request]):
+        """Add requests to the global stream.  Dispatch happens when the
+        router clock reaches each request's ``arrival``, not here."""
+        for r in reqs:
+            heapq.heappush(self._pending, (float(r.arrival), self._seq, r))
+            self._seq += 1
+
+    # ----------------------------------------------------------- policy --
+    def replica_snapshot(self) -> List[dict]:
+        """Live per-replica state, the policies' (and benchmarks') view:
+        queue depth, outstanding token load, KV occupancy, clock."""
+        out = []
+        for i, eng in enumerate(self.engines):
+            out.append({
+                "replica": i,
+                "sim_time": eng.sim_time,
+                "queue_depth": eng.scheduler.queue_depth,
+                "running": len(eng.scheduler.running),
+                "outstanding_tokens": eng.outstanding_tokens(),
+                "kv_free_cells": eng.kv_free_cells(),
+                "kv_occupancy": eng.kv_occupancy(),
+                "accepted_tokens": eng.accepted_tokens,
+                "dispatched": self.dispatch_count[i],
+            })
+        return out
+
+    def _eligible(self) -> List[int]:
+        """Replicas a dispatch may target: those with step budget left in
+        the current run (a budget-exhausted replica will never be stepped
+        again, so handing it a request strands the request while a
+        budgeted replica could have served it).  Falls back to everyone
+        when no replica has budget — conservation over progress."""
+        if self._budget is None:
+            return list(range(len(self.engines)))
+        el = [i for i, b in enumerate(self._budget) if b > 0]
+        return el or list(range(len(self.engines)))
+
+    def _choose(self, r: Request) -> int:
+        cand = self._eligible()
+        if len(cand) == 1:
+            return cand[0]
+        if self.cfg.policy == "lot":
+            return min(cand,
+                       key=lambda i: (self.engines[i].outstanding_tokens(),
+                                      i))
+        # p2c: two seeded probes of *distinct* replicas, keep the roomier
+        # one (ties: lower index).  Sampling with replacement would
+        # collapse to a single uniform probe 1/n of the time — at n=2
+        # that is half the dispatches ignoring KV state entirely.
+        a, b = (int(x) for x in
+                self._rng.choice(len(cand), size=2, replace=False))
+        pair = sorted((cand[a], cand[b]))
+        return max(pair,
+                   key=lambda i: (self.engines[i].kv_free_cells(), -i))
+
+    def _dispatch_due(self, now: float):
+        """Hand every pending request with ``arrival <= now`` to a replica
+        (in arrival order — each dispatch updates the state the next
+        choice reads)."""
+        while self._pending and self._pending[0][0] <= now + 1e-12:
+            _, _, r = heapq.heappop(self._pending)
+            i = self._choose(r)
+            self.dispatched_to[r.rid] = i
+            self.dispatch_count[i] += 1
+            self.engines[i].add_requests([r])
+            depth = self.engines[i].scheduler.queue_depth
+            if depth > self.peak_queue_depth[i]:
+                self.peak_queue_depth[i] = depth
+            self._observe_kv(i)
+
+    def _observe_kv(self, i: int):
+        """Track peak live occupancy — the end-of-run snapshot is always
+        drained (0), so benchmarks report this instead."""
+        occ = self.engines[i].kv_occupancy()
+        if occ > self.peak_kv_occupancy[i]:
+            self.peak_kv_occupancy[i] = occ
+
+    # ------------------------------------------------------------- loop --
+    def _replica_ctx(self, i: int):
+        if self.submeshes is None or self.rules is None:
+            return contextlib.nullcontext()
+        from repro.distributed.sharding import use_rules
+        return use_rules(self.submeshes[i], self.rules)
+
+    def step_replica(self, i: int) -> dict:
+        """One engine slot on replica ``i`` (under its sub-mesh's sharding
+        rules when meshes were provided)."""
+        with self._replica_ctx(i):
+            rec = self.engines[i].step()
+        self.steps[i] += 1
+        self._observe_kv(i)
+        return rec
+
+    def run(self, max_slots: int = 1000) -> dict:
+        """Drive the co-simulation until the stream drains (or every
+        replica with work exhausts its ``max_slots`` step budget)."""
+        budget = [max_slots] * len(self.engines)
+        self._budget = budget
+        try:
+            while True:
+                live = [i for i, eng in enumerate(self.engines)
+                        if eng.scheduler.outstanding and budget[i] > 0]
+                if not live:
+                    if self._pending and any(b > 0 for b in budget):
+                        # every replica idle: fast-forward the router clock
+                        # to the next arrival and dispatch it
+                        self._dispatch_due(self._pending[0][0])
+                        continue
+                    break
+                i = min(live, key=lambda j: (self.engines[j].sim_time, j))
+                self._dispatch_due(self.engines[i].sim_time)
+                self.step_replica(i)
+                budget[i] -= 1
+        finally:
+            self._budget = None
+        return self.stats()
+
+    # ------------------------------------------------------------ stats --
+    def stats(self) -> dict:
+        """Aggregate serving stats plus the per-replica breakdown.
+        ``replica_stats[i]`` is replica i's full engine stats dict —
+        with one replica it is exactly what the bare engine would
+        report."""
+        per = [eng.stats() for eng in self.engines]
+        accepted = sum(eng.accepted_tokens for eng in self.engines)
+        makespan = max((eng.sim_time for eng in self.engines), default=0.0)
+        reqs = [r for eng in self.engines for r in eng.requests.values()]
+        lat = [r.latency for r in reqs if r.latency is not None]
+        ttft = [r.first_token_time - r.arrival for r in reqs
+                if r.first_token_time is not None]
+        return {
+            "router_policy": self.cfg.policy,
+            "replicas": len(self.engines),
+            "dispatched": list(self.dispatch_count),
+            "undispatched": len(self._pending),
+            "steps": list(self.steps),
+            "peak_queue_depth": list(self.peak_queue_depth),
+            "peak_kv_occupancy": list(self.peak_kv_occupancy),
+            "accepted_tokens": accepted,
+            "makespan_sim": makespan,
+            "aggregate_goodput_sim": accepted / max(makespan, 1e-9),
+            "mean_latency": float(np.mean(lat)) if lat else 0.0,
+            "p95_latency": float(np.percentile(lat, 95)) if lat else 0.0,
+            "ttft_p50": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "ttft_p95": float(np.percentile(ttft, 95)) if ttft else 0.0,
+            "finished": sum(len(eng.scheduler.finished)
+                            for eng in self.engines),
+            "replica_snapshot": self.replica_snapshot(),
+            "replica_stats": per,
+        }

@@ -49,6 +49,30 @@ step would make no progress at all.
 The ``static`` policy reproduces the seed behaviour (admit a cohort only
 when the pool has fully drained, monolithic prefill) and is kept as the
 baseline that ``benchmarks/bench_serving.py`` compares against.
+
+Invariants (the contract the engine relies on; previously stated only in
+PR descriptions):
+
+* **Row ownership** — ``running`` holds exactly the requests that own an
+  engine pool row (``prefilling`` is a subset of it: row granted, partial
+  KV, not drafting).  A request is in at most one of pending / waiting /
+  running at any instant, and moves only through the ``mark_*``
+  acknowledgements — the scheduler never mutates engine state itself.
+* **Budget accounting units** — ``kv_budget`` and :meth:`kv_need` are in
+  KV *cells*; with ``block_size > 0`` (paged layout) demand is rounded up
+  to whole blocks first, so the budget the policy enforces equals the
+  physical blocks the pool holds (``kv_budget // block_size``) — an
+  enforced invariant, not a model.  ``token_budget`` and
+  :meth:`decode_cost` are in per-slot LLM *query tokens* (a decode slot
+  costs its granted depth ``k_i + 1``; a chunk costs its tokens) — the
+  two budgets are different currencies and never mix.
+* **Speculation margins** — admission and preemption project each
+  request at ``ctx + gamma + 1`` cells, where ``cfg.gamma`` is the
+  engine's *worst-case* depth (``gamma_max`` under the adaptive
+  controller): context plus the deepest draft window plus the
+  bonus/correction token.  The engine writes speculative KV at exactly
+  ``[ctx, ctx + k_i + 1)`` each slot, so a request the scheduler keeps
+  admitted can never scatter out of budget.
 """
 
 from __future__ import annotations
@@ -176,6 +200,18 @@ class ContinuousScheduler:
     @property
     def outstanding(self) -> bool:
         return bool(self._pending or self.waiting or self.running)
+
+    def outstanding_requests(self) -> List[Request]:
+        """Every request this scheduler still owes work: running
+        (prefilling included), waiting, and not-yet-arrived pending —
+        the router's per-replica load view."""
+        return (list(self.running.values()) + list(self.waiting)
+                + [r for _, _, r in self._pending])
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests without a row: waiting plus not-yet-arrived pending."""
+        return len(self.waiting) + len(self._pending)
 
     def next_arrival(self) -> Optional[float]:
         return self._pending[0][0] if self._pending else None

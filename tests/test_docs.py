@@ -1,0 +1,24 @@
+"""The docs gate (tools/check_docs.py) must pass: relative markdown
+links resolve and every launch/serve.py flag is documented in
+docs/SERVING.md.  Running it as tier-1 keeps docs drift from ever
+reaching CI's dedicated docs job."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_docs_links_and_flag_coverage():
+    env = dict(os.environ)
+    src = os.path.join(REPO, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_docs.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,92 @@
+"""Docs CI gate: broken-link and flag-drift checks.
+
+Two failure modes docs rot through, both mechanical enough to gate:
+
+1. **Broken relative links** — every ``[text](target)`` in README.md and
+   docs/*.md whose target is a repo path must resolve to an existing
+   file (anchors and external ``http(s)``/``mailto`` links are skipped).
+2. **Flag drift** — every ``--flag`` that ``repro.launch.serve``'s
+   argument parser accepts must be documented in ``docs/SERVING.md``
+   (the operator guide promises full flag coverage).  A new serve flag
+   without a SERVING.md entry fails CI.
+
+Run from the repo root::
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Exit status: 0 clean, 1 problems found (each printed on its own line).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    for name in sorted(os.listdir(docs)):
+        if name.endswith(".md"):
+            out.append(os.path.join(docs, name))
+    return out
+
+
+def check_links() -> list:
+    problems = []
+    for path in doc_files():
+        with open(path) as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:  # pure in-page anchor
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                problems.append(
+                    f"{os.path.relpath(path, REPO)}: broken link -> {target}"
+                )
+    return problems
+
+
+def check_flag_drift() -> list:
+    from repro.launch.serve import build_parser
+
+    with open(os.path.join(REPO, "docs", "SERVING.md")) as f:
+        serving_md = f.read()
+    problems = []
+    for action in build_parser()._actions:
+        for opt in action.option_strings:
+            if not opt.startswith("--") or opt == "--help":
+                continue
+            # word-boundary match: `--gamma` must not be satisfied by the
+            # documented `--gamma-max` (substring prefixes are the classic
+            # silent hole in drift gates)
+            if not re.search(re.escape(opt) + r"(?![\w-])", serving_md):
+                problems.append(
+                    f"docs/SERVING.md: serve.py flag {opt} is "
+                    "undocumented (flag-drift gate)"
+                )
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_flag_drift()
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"{len(problems)} docs problem(s)")
+        return 1
+    print("docs clean: links resolve, every serve.py flag documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
