@@ -36,7 +36,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_batching, bench_chunked, bench_gamma,
                             bench_heterogeneity, bench_overall, bench_paged,
                             bench_pipeline, bench_router, bench_selector,
-                            bench_serving, bench_verification, roofline)
+                            bench_serving, bench_tree, bench_verification,
+                            roofline)
 
     records = []
     section_name = [""]
@@ -59,6 +60,7 @@ def main(argv=None) -> None:
         ("paged kv", bench_paged.main),
         ("chunked prefill", bench_chunked.main),
         ("gamma depth", bench_gamma.main),
+        ("tree speculation", bench_tree.main),
         ("router replicas", bench_router.main),
         ("roofline", roofline.main),
     ]

@@ -179,6 +179,125 @@ def build_query_layout(lengths: Sequence[int], gamma):
     return q_rows, q_pos, q_seg
 
 
+@dataclasses.dataclass
+class TreeLayout:
+    """Packed query layout for single-pass token-tree verification.
+
+    One request contributes ``sum_j (k_j + 1)`` query tokens: every branch
+    carries its own copy of the root token (the pending last token, at
+    position ``lengths[i]``) followed by its ``k_j`` draft tokens.  Branch
+    0 is the main greedy chain; with a single branch the layout degenerates
+    to ``build_query_layout`` exactly (root + k draft queries).
+
+    Node ids are per-request: branch ``j`` owns the contiguous id range
+    ``[offset_j, offset_j + k_j]`` (root first), so a query at depth ``d``
+    has the ancestor bitmask ``((1 << (d+1)) - 1) << offset_j`` — its own
+    branch's nodes up to and including itself, nothing from siblings.
+    """
+    q_req: np.ndarray          # (Tq,) active-request index per query
+    q_branch: np.ndarray       # (Tq,) branch index within the request
+    q_depth: np.ndarray        # (Tq,) 0 = root, d >= 1 = draft depth d
+    q_pos: np.ndarray          # (1, Tq) absolute positions
+    q_seg: np.ndarray          # (1, Tq) segment = active-request index
+    q_anc: np.ndarray          # (Tq,) ancestor bitmask per query
+    node_id: np.ndarray        # (Tq,) tree-node id the query writes as
+    offsets: list              # offsets[i][j] = first query index of
+    #                            request i's branch j (root query)
+
+
+def build_tree_layout(lengths: Sequence[int], branch_depths) -> TreeLayout:
+    """Tree analogue of ``build_query_layout``.
+
+    ``branch_depths[i]`` is request i's list of branch draft depths
+    ``[k_0, k_1, ...]`` (each >= 1; total node count ``sum (k_j + 1)`` must
+    fit the 32-bit ancestor mask).  Queries are emitted request-major,
+    branch-major, depth-minor — for a single branch this is exactly the
+    linear ``[root, c_1..c_k]`` order.
+    """
+    q_req, q_branch, q_depth, q_pos, q_anc, node = [], [], [], [], [], []
+    offsets = []
+    for i, (length, depths) in enumerate(zip(lengths, branch_depths)):
+        total_nodes = sum(int(k) + 1 for k in depths)
+        if total_nodes > 32:
+            raise ValueError(
+                f"request {i}: {total_nodes} tree nodes exceed the 32-bit "
+                "ancestor mask (trim branches or depth)")
+        off, req_offsets = 0, []
+        for j, k in enumerate(depths):
+            k = int(k)
+            if k < 1:
+                raise ValueError(f"request {i} branch {j}: depth must be >= 1")
+            req_offsets.append(len(q_req))
+            for d in range(k + 1):
+                q_req.append(i)
+                q_branch.append(j)
+                q_depth.append(d)
+                q_pos.append(int(length) + d)
+                q_anc.append(((1 << (d + 1)) - 1) << off)
+                node.append(off + d)
+            off += k + 1
+        offsets.append(req_offsets)
+    q_req = np.asarray(q_req, np.int32)
+    return TreeLayout(
+        q_req=q_req,
+        q_branch=np.asarray(q_branch, np.int32),
+        q_depth=np.asarray(q_depth, np.int32),
+        q_pos=np.asarray(q_pos, np.int32)[None],
+        q_seg=q_req[None].copy(),
+        q_anc=np.asarray(q_anc, np.int32),
+        node_id=np.asarray(node, np.int32),
+        offsets=offsets,
+    )
+
+
+def build_tree_row_layout(lengths: Sequence[int], W: int, tree_rows: dict):
+    """Row-major tree-verify query layout over a full pool.
+
+    Every pool row contributes ``W + 1`` queries at positions
+    ``lengths[r] .. lengths[r] + W`` (the engine's static verify shape).
+    ``tree_rows`` maps pool row -> ``(seg_row, offset, k)`` for rows that
+    carry a tree branch: their queries take segment ``seg_row`` (the
+    request's main row, so forked rows attend the shared prefix) and
+    ancestor bitmask ``((1 << (min(d, k) + 1)) - 1) << offset`` — depth-d
+    queries see their own branch's nodes only; depths beyond ``k`` are
+    padding whose mask saturates at the leaf (their outputs land in
+    scrubbed cells / unused greedy positions).  Rows absent from
+    ``tree_rows`` get anc = -1 ("attend any node"), the linear semantics.
+
+    With every active row mapped as ``(row, 0, k_row)`` and no forks this
+    produces exactly ``build_query_layout(lengths, W)`` plus an anc vector
+    whose mask term is redundant (single-chain causality), which is what
+    makes branching=1 bit-identical to the linear engine.
+
+    Returns (q_rows (Tq,), q_pos (1, Tq), q_seg (1, Tq), q_anc (Tq,)).
+    """
+    n = len(lengths)
+    q_rows = np.repeat(np.arange(n, dtype=np.int32), W + 1)
+    d = np.tile(np.arange(W + 1, dtype=np.int32), n)
+    q_pos = (np.asarray(lengths, np.int32)[q_rows] + d)[None]
+    seg = np.arange(n, dtype=np.int64)
+    anc = np.full((n, W + 1), -1, np.int64)
+    dd = np.arange(W + 1, dtype=np.int64)
+    for row, (seg_row, off, k) in tree_rows.items():
+        seg[row] = seg_row
+        anc[row] = ((1 << (np.minimum(dd, int(k)) + 1)) - 1) << int(off)
+    q_seg = seg.astype(np.int32)[q_rows][None]
+    q_anc = anc.astype(np.uint32).astype(np.int32).reshape(-1)
+    return q_rows, q_pos, q_seg, q_anc
+
+
+def split_tree_depths(k: int, branches: int) -> list:
+    """Split a granted node budget ``k`` into per-branch draft depths.
+
+    Branch 0 (the main greedy chain) gets the deepest share; extra
+    branches get the remainder round-robin.  ``branches`` is capped at
+    ``k`` (every branch must draft at least one token), so ``branches=1``
+    or ``k=1`` degenerates to the linear ``[k]``."""
+    b = max(1, min(int(branches), int(k)))
+    base, rem = divmod(int(k), b)
+    return [base + (1 if j < rem else 0) for j in range(b)]
+
+
 def padding_stats(lengths: Sequence[int], plan: PackPlan) -> dict:
     return {
         "packed_cells": plan.total,

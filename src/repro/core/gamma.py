@@ -77,6 +77,11 @@ class GammaConfig:
     policy: str = "fixed"
     gamma: int = 4  # fixed depth; adaptive cold-start depth (no estimate)
     gamma_max: int = 4  # adaptive depth cap (fixed policy: == gamma)
+    # tree speculation: a depth-k grant is spent as a token TREE of
+    # min(branches, k) branches totalling k draft nodes, verified with
+    # k + min(branches, k) query tokens (every branch re-verifies its own
+    # root copy).  branches=1 is the linear chain: cost k + 1 exactly.
+    branches: int = 1
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -85,6 +90,8 @@ class GammaConfig:
             raise ValueError("gamma must be >= 1")
         if self.gamma_max < 1:
             raise ValueError("gamma_max must be >= 1")
+        if self.branches < 1:
+            raise ValueError("branches must be >= 1")
 
 
 def expected_tokens(accept: float, k: int) -> float:
@@ -142,9 +149,12 @@ class GammaController:
         """Marginal cost of one depth-k draft+verify iteration for one
         request: the same affine models the pipeline simulator uses,
         without the batching/KV terms (they are shared across the slot
-        and do not change the per-request argmax)."""
+        and do not change the per-request argmax).  Under tree
+        speculation the verify pass carries ``k + min(branches, k)``
+        query tokens (k draft nodes + one root copy per branch)."""
+        b_eff = max(1, min(self.cfg.branches, k))
         return self.cost.draft_time(ssm, 1, tokens=k) + self.cost.verify_time(
-            1, q_tokens=k + 1
+            1, q_tokens=k + b_eff
         )
 
     def best_depth(self, accept: float, ssm: int) -> int:
@@ -204,7 +214,13 @@ class GammaController:
             return
         avail = token_budget - max(0, int(reserved_tokens))
         avail = max(avail, 2 * len(depths))  # floor: depth 1 + bonus each
-        while sum(k + 1 for k in depths.values()) > avail:
+
+        def node_cost(k: int) -> int:
+            # verify query tokens of a depth-k grant: the k draft nodes
+            # plus one root copy per branch (linear: k + 1)
+            return k + max(1, min(self.cfg.branches, k))
+
+        while sum(node_cost(k) for k in depths.values()) > avail:
             rid = min(depths, key=lambda r: (-depths[r], r))
             if depths[rid] <= 1:
                 break

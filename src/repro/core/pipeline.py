@@ -103,7 +103,7 @@ def _per_req(val, j: int, default: float = 0.0) -> float:
 def simulate(cost: CostModel, ssm_batches: Sequence[int],
              micro_batches: Sequence[int],
              kv_cells_per_req=0.0, prefill_time: float = 0.0,
-             depth_per_req=None) -> SimResult:
+             depth_per_req=None, verify_extra_per_req=None) -> SimResult:
     """Event-time simulation of one speculation+verification iteration.
 
     ssm_batches[j]: requests drafted on SSM j.  micro_batches[j]: number of
@@ -118,7 +118,11 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
     time spent ingesting prompt tokens this slot (chunked-prefill grants
     or a monolithic admission); it occupies the LLM before any
     verification starts, while SSM drafting proceeds concurrently — the
-    interleaving a token-budget step planner exists to bound."""
+    interleaving a token-budget step planner exists to bound.
+    verify_extra_per_req: extra LLM query tokens per request beyond the
+    linear k+1 — tree speculation verifies one root copy per branch, so
+    a b-branch tree costs ``k + b`` query tokens (extra = b - 1); the
+    default 0 reproduces the linear model exactly."""
     ready: List[Tuple[float, int, int]] = []   # (ready_time, ssm, size)
     finish = [0.0] * len(ssm_batches)
     for j, (bj, mj) in enumerate(zip(ssm_batches, micro_batches)):
@@ -138,8 +142,9 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
         rt, j, sz = heapq.heappop(ready)
         start = max(llm_t, rt)
         kj = _per_req(depth_per_req, j, cost.gamma)
+        vx = _per_req(verify_extra_per_req, j)
         dur = cost.verify_time(sz, _per_req(kv_cells_per_req, j) * sz,
-                               q_tokens=sz * (kj + 1))
+                               q_tokens=sz * (kj + 1 + vx))
         llm_t = start + dur
         busy += dur
     makespan = llm_t
@@ -151,10 +156,12 @@ def simulate(cost: CostModel, ssm_batches: Sequence[int],
 def goodput_estimate(cost: CostModel, ssm_batches: Sequence[int],
                      micro_batches: Sequence[int],
                      accept_rates: Sequence[float],
-                     kv_cells_per_req=0.0, depth_per_req=None) -> float:
+                     kv_cells_per_req=0.0, depth_per_req=None,
+                     verify_extra_per_req=None) -> float:
     """Accepted tokens per second for one iteration under the schedule."""
     sim = simulate(cost, ssm_batches, micro_batches, kv_cells_per_req,
-                   depth_per_req=depth_per_req)
+                   depth_per_req=depth_per_req,
+                   verify_extra_per_req=verify_extra_per_req)
     if sim.makespan <= 0:
         return 0.0
     tokens = sum(b * (a * _per_req(depth_per_req, j, cost.gamma) + 1.0)
@@ -166,16 +173,19 @@ def choose_micro_batches(cost: CostModel, ssm_batches: Sequence[int],
                          accept_rates: Sequence[float], *, b0: int = 2,
                          tol: float = 0.02, max_mb: int = 16,
                          kv_cells_per_req=0.0,
-                         depth_per_req=None) -> Tuple[List[int], float]:
+                         depth_per_req=None,
+                         verify_extra_per_req=None) -> Tuple[List[int], float]:
     """Paper §V-B heuristic: iteratively split each SSM's batch further while
     the (offline-profiled) throughput does not significantly degrade."""
     n = len(ssm_batches)
     mb = [1] * n
     best = goodput_estimate(cost, ssm_batches, mb, accept_rates,
-                            kv_cells_per_req, depth_per_req)
+                            kv_cells_per_req, depth_per_req,
+                            verify_extra_per_req)
     cur = [min(b0, max(1, b)) for b in ssm_batches]
     cur_g = goodput_estimate(cost, ssm_batches, cur, accept_rates,
-                             kv_cells_per_req, depth_per_req)
+                             kv_cells_per_req, depth_per_req,
+                             verify_extra_per_req)
     if cur_g >= best * (1 - tol):
         mb, best = cur, max(best, cur_g)
         while max(mb) < max_mb:
@@ -183,7 +193,8 @@ def choose_micro_batches(cost: CostModel, ssm_batches: Sequence[int],
             if nxt == mb:
                 break
             g = goodput_estimate(cost, ssm_batches, nxt, accept_rates,
-                                 kv_cells_per_req, depth_per_req)
+                                 kv_cells_per_req, depth_per_req,
+                                 verify_extra_per_req)
             if g < best * (1 - tol):        # significant degradation: stop
                 break
             if g > best:

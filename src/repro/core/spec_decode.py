@@ -22,6 +22,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import config as C
 from repro.models import transformer as T
@@ -43,6 +44,7 @@ class Bundle:
                 p, self.cfg, cache, tokens=toks, lengths=lengths))
         self._decode_paged = None
         self._verify_paged = None
+        self._verify_paged_tree = None
         self._append = None
         self._append_paged = None
 
@@ -103,6 +105,25 @@ class Bundle:
                                   segments, q_rows, block_tables, block_ids,
                                   block_owner)
 
+    def verify_paged_tree(self, cache, tokens, positions, segments, q_rows,
+                          block_tables, block_ids, block_owner, q_anc,
+                          block_node):
+        """Tree-topology packed verification: like :meth:`verify_paged`
+        plus the ancestor-bitmask / per-slot node-tag mask term, so one
+        pass scores every root-to-leaf path of a token tree."""
+        if self._verify_paged_tree is None:
+            from repro.serving.paged import verify_step_paged
+            self._verify_paged_tree = jax.jit(
+                lambda p, c, t, pos, seg, qr, bt, ids, ow, anc, node:
+                verify_step_paged(
+                    p, self.cfg, c, tokens=t, positions=pos, segments=seg,
+                    q_rows=qr, block_tables=bt, block_ids=ids,
+                    block_owner=ow, q_anc=anc, block_node=node))
+        return self._verify_paged_tree(self.params, cache, tokens, positions,
+                                       segments, q_rows, block_tables,
+                                       block_ids, block_owner, q_anc,
+                                       block_node)
+
     @property
     def has_recurrent_state(self) -> bool:
         kinds = set(self.cfg.unit) | set(self.cfg.tail)
@@ -152,6 +173,48 @@ def draft(ssm: Bundle, cache, last_tokens, lengths, gamma: int, rng,
     cand = jnp.concatenate(cands, axis=1)
     qprobs = jnp.stack(qs, axis=1) if collect_probs else None
     return cand, qprobs, cache
+
+
+def draft_tree(ssm: Bundle, cache, last_tokens, lengths, gamma: int, ranks,
+               block_tables=None):
+    """Greedy tree drafting: each pool row autoregressively extends ONE
+    branch of a request's token tree.
+
+    Rows of the same request share identical context (the engine forks
+    their block tables copy-on-write), so their step-1 logits are
+    identical; ``ranks[b]`` selects which top-k candidate row b commits to
+    at the first step (rank 0 = argmax, the main chain) — after that every
+    row continues greedily down its own branch.  No cross-row
+    communication is needed, and with all ranks 0 (single branch) the
+    emitted tokens are bitwise identical to :func:`draft` at
+    temperature 0.  Returns (cand (B, gamma), cache)."""
+    ranks_np = np.asarray(ranks)
+    kmax = int(ranks_np.max()) + 1 if ranks_np.size else 1
+    ranks = jnp.asarray(ranks_np, jnp.int32)
+    cands = []
+    tok = last_tokens
+    for g in range(gamma):
+        if block_tables is not None:
+            logits, cache = ssm.decode_paged(cache, tok, lengths + g,
+                                             block_tables)
+        else:
+            logits, cache = ssm.decode(cache, tok, lengths + g)
+        probs = logits_to_probs(logits[:, -1], 0.0, ssm.cfg.vocab_size)
+        best = jnp.argmax(probs, -1, keepdims=True).astype(jnp.int32)
+        if g == 0 and kmax > 1:
+            lg = logits[:, -1].astype(jnp.float32)
+            if lg.shape[-1] > ssm.cfg.vocab_size:   # mask vocab padding
+                vmask = jnp.arange(lg.shape[-1]) < ssm.cfg.vocab_size
+                lg = jnp.where(vmask, lg, -1e30)
+            _, topi = jax.lax.top_k(lg, kmax)
+            ranked = jnp.take_along_axis(topi.astype(jnp.int32),
+                                         ranks[:, None], axis=1)
+            # rank 0 keeps argmax's tie-breaking (== linear draft exactly)
+            tok = jnp.where(ranks[:, None] == 0, best, ranked)
+        else:
+            tok = best
+        cands.append(tok)
+    return jnp.concatenate(cands, axis=1), cache
 
 
 # ----------------------------------------------------------------- verify --

@@ -149,8 +149,8 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
 
 # ----------------------------------------------------------------- verify --
 
-def _verify_kernel(ids_ref, owner_ref, q_seg_ref, q_pos_ref,
-                   pos_ref, seg_ref, q_ref, k_ref, v_ref, o_ref,
+def _verify_kernel(ids_ref, owner_ref, q_seg_ref, q_pos_ref, q_anc_ref,
+                   pos_ref, seg_ref, node_ref, q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref, *, nb: int, scale: float):
     j = pl.program_id(1)
 
@@ -162,8 +162,10 @@ def _verify_kernel(ids_ref, owner_ref, q_seg_ref, q_pos_ref,
 
     q_seg = q_seg_ref[...]                  # (BQ,)
     q_pos = q_pos_ref[...]
+    q_anc = q_anc_ref[...]                  # (BQ,) ancestor bitmask
     owner = owner_ref[j]                    # scalar: segment owning block j
     kv_pos = pos_ref[0]                     # (bs,)
+    kv_node = node_ref[0]                   # (bs,) tree-node tag
     # a pool slot is attendable iff its block is live (owner >= 0) and the
     # slot itself holds committed/accepted KV (pool seg >= 0)
     kv_seg = jnp.where(seg_ref[0] >= 0, owner, -1)
@@ -189,6 +191,12 @@ def _verify_kernel(ids_ref, owner_ref, q_seg_ref, q_pos_ref,
         mask = (q_seg[:, None] == kv_seg[None, :]) \
             & (kv_seg[None, :] >= 0) \
             & (kv_pos[None, :] <= q_pos[:, None])       # (BQ, bs)
+        # tree-topology term (see kernels/verify_attention.py): -1 =
+        # committed (always attendable), -2 = dead CoW duplicate (never),
+        # n >= 0 = attendable iff bit n of the query's ancestor mask
+        nd = kv_node[None, :]
+        on_path = ((q_anc[:, None] >> jnp.clip(nd, 0, 31)) & 1).astype(bool)
+        mask &= jnp.where(nd == -1, True, jnp.where(nd < -1, False, on_path))
         s = jnp.where(mask[:, None, None, :], s, NEG)
 
         m_prev = m_ref[...].reshape(BQ, Kh, G)
@@ -220,7 +228,8 @@ def _verify_kernel(ids_ref, owner_ref, q_seg_ref, q_pos_ref,
 
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
-                           q_seg, q_pos, block_ids, block_owner, *,
+                           q_seg, q_pos, block_ids, block_owner,
+                           q_anc=None, block_node=None, *,
                            bq: int = 128, interpret: bool = False):
     """Packed verification over live pool blocks (paper Eq. 13, paged).
 
@@ -230,12 +239,20 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
     q_seg, q_pos: (Tq,) request segment / position per query;
     block_ids: (M,) physical ids of the live blocks (any order);
     block_owner: (M,) request segment owning each listed block (-1 = padding
-    entry: the block is skipped).  Returns (Tq, H, D).
+    entry: the block is skipped).  Optional tree-speculation topology:
+    q_anc (Tq,) ancestor bitmask per query, block_node (M, bs) per-slot
+    node tags aligned with block_ids (-1 committed, -2 dead, n >= 0 tree
+    node).  Returns (Tq, H, D).
     """
     Tq, H, D = q.shape
     N, bs, Kh, _ = k_pool.shape
     M = block_ids.shape[0]
     scale = 1.0 / np.sqrt(D)
+
+    if q_anc is None:
+        q_anc = jnp.full((Tq,), -1, jnp.int32)
+    if block_node is None:
+        block_node = jnp.full((M, bs), -1, jnp.int32)
 
     Tq_p = int(np.ceil(Tq / bq) * bq)
     qp = jnp.pad(q, ((0, Tq_p - Tq), (0, 0), (0, 0)))
@@ -243,6 +260,7 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
         return jnp.pad(x.astype(jnp.int32), (0, n), constant_values=-1)
     q_seg_p = pad_i32(q_seg, Tq_p - Tq)
     q_pos_p = pad_i32(q_pos, Tq_p - Tq)
+    q_anc_p = pad_i32(q_anc, Tq_p - Tq)
     ids = jnp.maximum(block_ids.astype(jnp.int32), 0)
     owner = block_owner.astype(jnp.int32)
 
@@ -255,8 +273,11 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
         in_specs=[
             pl.BlockSpec((bq,), lambda i, j, ids, ow: (i,)),
             pl.BlockSpec((bq,), lambda i, j, ids, ow: (i,)),
+            pl.BlockSpec((bq,), lambda i, j, ids, ow: (i,)),
             pl.BlockSpec((1, bs), blk),
             pl.BlockSpec((1, bs), blk),
+            # block_node is in *gathered* order, aligned with block_ids
+            pl.BlockSpec((1, bs), lambda i, j, ids, ow: (j, 0)),
             pl.BlockSpec((bq, H, D), lambda i, j, ids, ow: (i, 0, 0)),
             pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow:
                          (ids[j], 0, 0, 0)),
@@ -275,6 +296,7 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Tq_p, H, D), q.dtype),
         interpret=interpret,
-    )(ids, owner, q_seg_p, q_pos_p, pool_pos.astype(jnp.int32),
-      pool_seg.astype(jnp.int32), qp, k_pool, v_pool)
+    )(ids, owner, q_seg_p, q_pos_p, q_anc_p, pool_pos.astype(jnp.int32),
+      pool_seg.astype(jnp.int32), block_node.astype(jnp.int32),
+      qp, k_pool, v_pool)
     return out[:Tq]

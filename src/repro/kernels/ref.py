@@ -10,12 +10,32 @@ import numpy as np
 NEG = -1e30
 
 
-def verify_attention_ref(q, k, v, q_seg, q_pos, kv_seg, kv_pos):
+def tree_mask_term(q_anc, kv_node):
+    """Topology-aware tree-speculation mask term (SpecInfer-style).
+
+    ``q_anc``: per-query int32 ancestor bitmask — bit ``n`` set iff tree
+    node ``n`` is an ancestor of (or is) the query's own node; -1 (all
+    bits) for non-tree queries.  ``kv_node``: per-KV-slot int32 node tag —
+    -1 for committed context (always attendable, subject to the causal /
+    segment terms), -2 for dead slots (duplicate committed cells inside a
+    CoW branch copy: never attendable), ``n >= 0`` for a slot written by
+    tree node ``n`` (attendable only along the query's root-to-node path).
+    Shapes broadcast: q_anc (..., Tq, 1) x kv_node (..., 1, Tkv).
+    """
+    on_path = ((q_anc >> jnp.clip(kv_node, 0, 31)) & 1).astype(bool)
+    return jnp.where(kv_node == -1, True,
+                     jnp.where(kv_node < -1, False, on_path))
+
+
+def verify_attention_ref(q, k, v, q_seg, q_pos, kv_seg, kv_pos,
+                         q_anc=None, kv_node=None):
     """SPIN packed verification attention — direct Eq. (13).
 
     q: (Tq, H, D); k, v: (Tkv, Kh, D); segs/pos: int32 1-D.
     a_{i,j} = F(q_i,k_j) * I[seg_j == seg_i] / sum_j' F(q_i,k_j') I[...]
     with causal masking kv_pos <= q_pos and empty slots seg == -1.
+    Optional ``q_anc`` (Tq,) / ``kv_node`` (Tkv,) add the tree-topology
+    term (see ``tree_mask_term``) for single-pass token-tree verification.
     """
     Tq, H, Dh = q.shape
     Kh = k.shape[1]
@@ -27,6 +47,8 @@ def verify_attention_ref(q, k, v, q_seg, q_pos, kv_seg, kv_pos):
     mask = (q_seg[:, None] == kv_seg[None, :]) \
         & (kv_seg[None, :] >= 0) \
         & (kv_pos[None, :] <= q_pos[:, None])
+    if kv_node is not None:
+        mask &= tree_mask_term(q_anc[:, None], kv_node[None, :])
     s = jnp.where(mask[:, None, None, :], s, NEG)
     m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
     p = jnp.exp(s - m)
@@ -73,8 +95,11 @@ def paged_decode_ref(q, k_pool, v_pool, block_tables, lengths):
 
 
 def paged_verify_ref(q, k_pool, v_pool, pool_seg, pool_pos,
-                     q_seg, q_pos, block_ids, block_owner):
-    """Gather the live blocks into a flat packed view, then Eq. (13)."""
+                     q_seg, q_pos, block_ids, block_owner,
+                     q_anc=None, block_node=None):
+    """Gather the live blocks into a flat packed view, then Eq. (13).
+    ``block_node`` (M, bs) carries per-slot tree-node tags aligned with
+    ``block_ids`` (see ``tree_mask_term``)."""
     ids = jnp.maximum(block_ids, 0)
     bs = k_pool.shape[1]
     k = k_pool[ids].reshape(-1, *k_pool.shape[2:])
@@ -83,7 +108,9 @@ def paged_verify_ref(q, k_pool, v_pool, pool_seg, pool_pos,
     kv_pos = pool_pos[ids].reshape(-1)
     owner = jnp.repeat(block_owner, bs)
     kv_seg = jnp.where((slot_seg >= 0) & (owner >= 0), owner, -1)
-    return verify_attention_ref(q, k, v, q_seg, q_pos, kv_seg, kv_pos)
+    kv_node = None if block_node is None else block_node.reshape(-1)
+    return verify_attention_ref(q, k, v, q_seg, q_pos, kv_seg, kv_pos,
+                                q_anc, kv_node)
 
 
 def decode_ref(q, k, v, lengths):

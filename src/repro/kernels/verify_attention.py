@@ -34,7 +34,8 @@ from jax.experimental import pallas as pl
 NEG = -1e30
 
 
-def _kernel(q_seg_ref, q_pos_ref, kv_seg_ref, kv_pos_ref,   # scalar-ish
+def _kernel(q_seg_ref, q_pos_ref, q_anc_ref,                # scalar-ish
+            kv_seg_ref, kv_pos_ref, kv_node_ref,
             q_ref, k_ref, v_ref,                            # VMEM tiles
             o_ref,                                          # output tile
             m_ref, l_ref, acc_ref,                          # VMEM scratch
@@ -49,8 +50,10 @@ def _kernel(q_seg_ref, q_pos_ref, kv_seg_ref, kv_pos_ref,   # scalar-ish
 
     q_seg = q_seg_ref[...]                  # (BQ,)
     q_pos = q_pos_ref[...]
+    q_anc = q_anc_ref[...]                  # (BQ,) ancestor bitmask
     kv_seg = kv_seg_ref[...]                # (BK,)
     kv_pos = kv_pos_ref[...]
+    kv_node = kv_node_ref[...]              # (BK,) tree-node tag
 
     # Block-level skip: segment ranges disjoint OR the whole KV block is in
     # the future of every query OR all slots empty.  Padding slots carry
@@ -80,6 +83,12 @@ def _kernel(q_seg_ref, q_pos_ref, kv_seg_ref, kv_pos_ref,   # scalar-ish
         mask = (q_seg[:, None] == kv_seg[None, :]) \
             & (kv_seg[None, :] >= 0) \
             & (kv_pos[None, :] <= q_pos[:, None])       # (BQ, BK)
+        # tree-topology term: committed slots (node -1) always attendable,
+        # dead slots (node -2) never, node-tagged slots only along the
+        # query's own root-to-leaf path (ancestor bitmask)
+        nd = kv_node[None, :]
+        on_path = ((q_anc[:, None] >> jnp.clip(nd, 0, 31)) & 1).astype(bool)
+        mask &= jnp.where(nd == -1, True, jnp.where(nd < -1, False, on_path))
         s = jnp.where(mask[:, None, None, :], s, NEG)
 
         m_prev = m_ref[...].reshape(BQ, Kh, G)
@@ -113,16 +122,25 @@ def _kernel(q_seg_ref, q_pos_ref, kv_seg_ref, kv_pos_ref,   # scalar-ish
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
-def verify_attention(q, k, v, q_seg, q_pos, kv_seg, kv_pos, *,
+def verify_attention(q, k, v, q_seg, q_pos, kv_seg, kv_pos,
+                     q_anc=None, kv_node=None, *,
                      bq: int = 128, bk: int = 128,
                      interpret: bool = False):
     """q: (Tq, H, D); k,v: (Tkv, Kh, D); segs/pos int32.  Returns (Tq,H,D).
 
-    Inputs are padded to block multiples here (padding queries get seg=-1
-    and produce zeros)."""
+    Optional ``q_anc`` (Tq,) / ``kv_node`` (Tkv,) add the tree-speculation
+    topology term (ancestor bitmask vs per-slot node tag); omitted they
+    default to -1 everywhere, which reduces the mask to the linear Eq. 13
+    form exactly.  Inputs are padded to block multiples here (padding
+    queries get seg=-1 and produce zeros)."""
     Tq, H, D = q.shape
     Tkv, Kh, _ = k.shape
     scale = 1.0 / np.sqrt(D)
+
+    if q_anc is None:
+        q_anc = jnp.full((Tq,), -1, jnp.int32)
+    if kv_node is None:
+        kv_node = jnp.full((Tkv,), -1, jnp.int32)
 
     Tq_p = int(np.ceil(Tq / bq) * bq)
     Tkv_p = int(np.ceil(Tkv / bk) * bk)
@@ -133,8 +151,10 @@ def verify_attention(q, k, v, q_seg, q_pos, kv_seg, kv_pos, *,
         return jnp.pad(x.astype(jnp.int32), (0, n), constant_values=-1)
     q_seg_p = pad_i32(q_seg, Tq_p - Tq)
     q_pos_p = pad_i32(q_pos, Tq_p - Tq)
+    q_anc_p = pad_i32(q_anc, Tq_p - Tq)
     kv_seg_p = pad_i32(kv_seg, Tkv_p - Tkv)
     kv_pos_p = pad_i32(kv_pos, Tkv_p - Tkv)
+    kv_node_p = pad_i32(kv_node, Tkv_p - Tkv)
 
     nq, nk = Tq_p // bq, Tkv_p // bk
     grid = (nq, nk)
@@ -145,6 +165,8 @@ def verify_attention(q, k, v, q_seg, q_pos, kv_seg, kv_pos, *,
         in_specs=[
             pl.BlockSpec((bq,), lambda i, j: (i,)),
             pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bq, H, D), lambda i, j: (i, 0, 0)),
@@ -159,7 +181,7 @@ def verify_attention(q, k, v, q_seg, q_pos, kv_seg, kv_pos, *,
             _vmem((bq, H, D), jnp.float32),   # accumulator
         ],
         interpret=interpret,
-    )(q_seg_p, q_pos_p, kv_seg_p, kv_pos_p, qp, kp, vp)
+    )(q_seg_p, q_pos_p, q_anc_p, kv_seg_p, kv_pos_p, kv_node_p, qp, kp, vp)
     return out[:Tq]
 
 

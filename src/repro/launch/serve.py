@@ -136,6 +136,21 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-slot LLM query-token budget shared between "
                          "decode slots (gamma+1 tokens each) and prefill "
                          "chunks; default: unthrottled")
+    ap.add_argument("--spec-shape", default="linear",
+                    choices=["linear", "tree"],
+                    help="speculation shape: linear drafts one chain per "
+                         "request; tree splits each granted depth across "
+                         "up to --spec-branch branches (the drafter's "
+                         "top-k first-step candidates), forks the paged "
+                         "KV row copy-on-write per branch and verifies "
+                         "the whole token tree in one packed pass (needs "
+                         "--kv-layout paged and packed verification; "
+                         "falls back to linear with a warning otherwise)")
+    ap.add_argument("--spec-branch", type=int, default=2,
+                    help="tree-speculation branching factor (only with "
+                         "--spec-shape tree); 1 is bit-identical to "
+                         "linear; gamma_max + branches must fit the "
+                         "32-node ancestor mask")
     ap.add_argument("--replicas", type=int, default=1,
                     help="independent engine replicas behind the router "
                          "(serving/router.py); --capacity and --kv-budget "
@@ -171,6 +186,16 @@ def main(argv=None):
         ap.error("--capacity must be positive")
     if args.replicas <= 0:
         ap.error("--replicas must be positive")
+    if args.spec_branch < 1:
+        ap.error("--spec-branch must be >= 1")
+    if args.spec_shape == "tree":
+        gmax = (args.gamma if args.gamma_policy == "fixed"
+                else (args.gamma_max if args.gamma_max is not None
+                      else 2 * args.gamma))
+        if gmax + min(args.spec_branch, gmax) > 32:
+            ap.error(f"--spec-shape tree needs gamma_max + branches <= 32 "
+                     f"tree nodes (got gamma_max={gmax}, "
+                     f"spec_branch={args.spec_branch})")
 
     llm, ssms = build_zoo(args.vocab, args.seed, args.n_ssms)
     reqs = make_workload(args.dataset, args.requests, args.vocab,
@@ -203,6 +228,8 @@ def main(argv=None):
                             block_size=args.block_size,
                             prefill_chunk=args.prefill_chunk,
                             token_budget=args.token_budget,
+                            spec_shape=args.spec_shape,
+                            spec_branch=args.spec_branch,
                             seed=seed)
         return SpinEngine(llm, ssms, sel, ecfg)
 

@@ -39,11 +39,16 @@ def rope(x, positions, theta: float = 10000.0):
     return out.astype(x.dtype)
 
 
-def _attn_block(q, k, v, q_pos, kv_pos, q_seg, kv_seg, window, scale):
+def _attn_block(q, k, v, q_pos, kv_pos, q_seg, kv_seg, window, scale,
+                q_anc=None, kv_node=None):
     """Attention for one query block against full K/V.
 
     q: (B, Qb, Kh, G, D)   k,v: (B, Skv, Kh, D)
     q_pos: (B, Qb)  kv_pos: (B, Skv)  segs same shapes (or None)
+    q_anc/kv_node (optional, same shapes as segs): tree-speculation
+    topology term — q_anc is the query's ancestor bitmask (-1 = any),
+    kv_node the slot's tree-node tag (-1 committed, -2 dead, n >= 0 the
+    node that wrote it; attendable iff bit n of q_anc is set).
     """
     s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
@@ -52,6 +57,11 @@ def _attn_block(q, k, v, q_pos, kv_pos, q_seg, kv_seg, window, scale):
         mask &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
     if q_seg is not None:
         mask &= q_seg[:, :, None] == kv_seg[:, None, :]
+    if kv_node is not None:
+        nd = kv_node[:, None, :]
+        on_path = ((q_anc[:, :, None] >> jnp.clip(nd, 0, 31)) & 1
+                   ).astype(bool)
+        mask &= jnp.where(nd == -1, True, jnp.where(nd < -1, False, on_path))
     s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     # rows with no valid key (padding query) -> all NEG_INF; keep finite
@@ -65,6 +75,7 @@ def _attn_block(q, k, v, q_pos, kv_pos, q_seg, kv_seg, window, scale):
 
 def attention(q, k, v, *, q_positions, kv_positions,
               q_segments=None, kv_segments=None,
+              q_anc=None, kv_node=None,
               window: int = 0, q_block: int = 512):
     """GQA chunked-causal attention.
 
@@ -73,6 +84,9 @@ def attention(q, k, v, *, q_positions, kv_positions,
     segments (optional) restrict attention to equal segment ids — this is the
     TPU-native form of SPIN Eq. (13): the softmax denominator sums over all
     packed tokens of the same original request and nothing else.
+    q_anc / kv_node (optional) add the tree-speculation topology term on
+    top: a query attends a node-tagged slot only along its own
+    root-to-leaf path (see ``_attn_block``); omitted = linear behaviour.
     """
     B, Sq, Hq, D = q.shape
     Kh = k.shape[2]
@@ -82,7 +96,8 @@ def attention(q, k, v, *, q_positions, kv_positions,
 
     if Sq <= q_block:
         o = _attn_block(qg, k, v, q_positions, kv_positions,
-                        q_segments, kv_segments, window, scale)
+                        q_segments, kv_segments, window, scale,
+                        q_anc, kv_node)
         return o.reshape(B, Sq, Hq, D)
 
     if Sq % q_block:
@@ -95,9 +110,12 @@ def attention(q, k, v, *, q_positions, kv_positions,
         if q_segments is not None:
             q_segments = jnp.pad(q_segments, ((0, 0), (0, pad)),
                                  constant_values=-1)
+        if q_anc is not None:
+            q_anc = jnp.pad(q_anc, ((0, 0), (0, pad)), constant_values=0)
         out = attention(qg.reshape(B, Sq + pad, Hq, D), k, v,
                         q_positions=q_positions, kv_positions=kv_positions,
                         q_segments=q_segments, kv_segments=kv_segments,
+                        q_anc=q_anc, kv_node=kv_node,
                         window=window, q_block=q_block)
         return out[:, :Sq]
 
@@ -110,14 +128,22 @@ def attention(q, k, v, *, q_positions, kv_positions,
     else:
         seg_blocks = q_segments.reshape(B, nq, q_block).transpose(1, 0, 2)
         kv_segments_ = kv_segments
+    if q_anc is None:
+        anc_blocks = jnp.full((nq, B, q_block), -1, jnp.int32)
+        kv_node_ = None if kv_node is None else kv_node
+    else:
+        anc_blocks = q_anc.reshape(B, nq, q_block).transpose(1, 0, 2)
+        kv_node_ = kv_node
 
     def body2(carry, xs):
-        qb, qp, qs = xs
+        qb, qp, qs, qa = xs
         o = _attn_block(qb, k, v, qp, kv_positions, qs, kv_segments_,
-                        window, scale)
+                        window, scale,
+                        None if kv_node_ is None else qa, kv_node_)
         return carry, o
 
-    _, outs = lax.scan(body2, None, (qs_blocks, qp_blocks, seg_blocks))
+    _, outs = lax.scan(body2, None,
+                       (qs_blocks, qp_blocks, seg_blocks, anc_blocks))
     o = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, D)
     return o
 

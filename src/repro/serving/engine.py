@@ -51,6 +51,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -116,6 +117,17 @@ class EngineConfig:
     # per-slot LLM query-token budget split between decode slots
     # (gamma+1 tokens each) and prefill chunks; None = unthrottled
     token_budget: Optional[int] = None
+    # speculation shape: "linear" drafts one chain per request (the
+    # classic SPIN iteration); "tree" splits each granted depth k across
+    # up to ``spec_branch`` branches (the drafter's top-k step-1
+    # candidates), forks the request's paged KV row copy-on-write per
+    # branch, and verifies the whole token tree in ONE packed pass with a
+    # topology-aware mask — the longest verified root-to-leaf path wins.
+    # Tree mode needs the paged layout + packed verification; otherwise
+    # it falls back to linear with a warning (like the paged->dense
+    # auto-fallback).  spec_branch=1 is bit-identical to linear.
+    spec_shape: str = "linear"
+    spec_branch: int = 2
 
 
 class SpinEngine:
@@ -128,6 +140,10 @@ class SpinEngine:
         self.ecfg = ecfg
         if ecfg.kv_layout not in ("paged", "dense"):
             raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}")
+        if ecfg.spec_shape not in ("linear", "tree"):
+            raise ValueError(f"unknown spec_shape {ecfg.spec_shape!r}")
+        if ecfg.spec_branch < 1:
+            raise ValueError("spec_branch must be >= 1")
         if ecfg.gamma_policy == "fixed":
             self.gamma_max = ecfg.gamma
         else:
@@ -136,6 +152,27 @@ class SpinEngine:
         self.paged = (ecfg.kv_layout == "paged"
                       and paged_compatible(llm.cfg)
                       and all(paged_compatible(b.cfg) for b in self.ssms))
+        # tree speculation rides the paged packed-verify path (forks are
+        # block-table aliases; the topology mask threads through the
+        # packed query layout) — anything else falls back to the linear
+        # shape, mirroring the paged->dense auto-fallback
+        self.tree = (ecfg.spec_shape == "tree" and self.paged
+                     and ecfg.use_packed_verify)
+        if ecfg.spec_shape == "tree" and not self.tree:
+            warnings.warn(
+                "spec_shape='tree' requires the paged KV layout and packed "
+                "verification; falling back to linear speculation",
+                stacklevel=2)
+        self.branches = ecfg.spec_branch if self.tree else 1
+        if self.tree and self.gamma_max + min(ecfg.spec_branch,
+                                              self.gamma_max) > 32:
+            raise ValueError(
+                f"tree speculation needs gamma_max + branches <= 32 tree "
+                f"nodes for the 32-bit ancestor mask (gamma_max="
+                f"{self.gamma_max}, spec_branch={ecfg.spec_branch})")
+        # each extra branch needs a pool row to draft/verify through;
+        # scheduler capacity (concurrent requests) stays ecfg.capacity
+        row_mult = self.branches
         if self.paged:
             bs = ecfg.block_size
             bpr = math.ceil(ecfg.max_len / bs)
@@ -148,12 +185,13 @@ class SpinEngine:
             # an empty pool (deadlock-freedom guarantee) always fits
             budget_blocks = max(1, budget // bs)
             self.llm_pool = PagedCachePool(
-                llm.cfg, ecfg.capacity, self.max_len, bs,
+                llm.cfg, ecfg.capacity * row_mult, self.max_len, bs,
                 num_blocks=max(budget_blocks, bpr))
             # draft pools are capacity-sized (fast switching keeps every
             # row draftable); the budget-constrained pool is the LLM's
             self.ssm_pools = [
-                PagedCachePool(b.cfg, selector.cfg.batch_limits[j],
+                PagedCachePool(b.cfg,
+                               selector.cfg.batch_limits[j] * row_mult,
                                self.max_len, bs)
                 for j, b in enumerate(self.ssms)]
             sched_budget = budget_blocks * bs
@@ -173,7 +211,7 @@ class SpinEngine:
             llm_fixed=1e-3, llm_time_per_token=5e-4, gamma=ecfg.gamma)
         self.gamma_ctl = GammaController(
             GammaConfig(policy=ecfg.gamma_policy, gamma=ecfg.gamma,
-                        gamma_max=self.gamma_max),
+                        gamma_max=self.gamma_max, branches=self.branches),
             self.cost, selector)
         self.failed_ssms: set = set()
         self.requests: Dict[int, Request] = {}
@@ -191,13 +229,17 @@ class SpinEngine:
             kv_budget=sched_budget, policy=ecfg.scheduler_policy,
             block_size=ecfg.block_size if self.paged else 0,
             prefill_chunk=ecfg.prefill_chunk if self.chunked else 0,
-            token_budget=ecfg.token_budget))
+            token_budget=ecfg.token_budget,
+            spec_branches=self.branches))
         self.rng = jax.random.PRNGKey(ecfg.seed)
         # metrics
         self.sim_time = 0.0
         self.wall_time = 0.0
         self.accepted_tokens = 0
         self.total_drafted = 0
+        self.verify_tokens_total = 0       # LLM verify query tokens issued
+        self.tree_forks = 0                # CoW row forks (tree mode)
+        self.tree_adoptions = 0            # slots won by a non-main branch
         self.prefill_tokens_total = 0
         self.slot_log: List[dict] = []
         self.straggler_redispatches = 0
@@ -507,7 +549,12 @@ class SpinEngine:
             ids, assign,
             token_budget=self.ecfg.token_budget if self.chunked else None,
             reserved_tokens=self.scheduler.last_prefill_granted)
-        self.scheduler.set_decode_depths(depths)
+        # tree mode: a depth-k grant verifies k + b_eff query tokens (one
+        # root copy per branch), so the step planner's token-budget split
+        # must see that cost; linear b_eff = 1 keeps the k + 1 charge
+        self.scheduler.set_decode_depths(
+            {rid: k + self._beff(k) - 1 for rid, k in depths.items()}
+            if self.tree else depths)
         if self.paged:
             # append-a-block growth: cover context + this slot's granted
             # speculation window (k_i + 1) before decode/verify writes land
@@ -517,24 +564,38 @@ class SpinEngine:
 
         # draft on every SSM pool (static shapes at the pool's slot-max
         # depth; rows granted less contribute only their k_i-token prefix)
-        drafts: Dict[int, np.ndarray] = {}
+        drafts: Dict[int, object] = {}
         per_ssm_batch = []
         per_ssm_depth = []
+        per_ssm_vextra = []
         for j, (b, pool) in enumerate(zip(self.ssms, self.ssm_pools)):
             rids = [r for r in ids if assign.get(r) == j]
             per_ssm_batch.append(len(rids))
             if not rids or j in self.failed_ssms:
                 per_ssm_depth.append(float(self.cost.gamma))
+                per_ssm_vextra.append(0.0)
                 continue
             # ragged per-slot batch: cost covers the requests actually
             # assigned this slot at their granted depths, not the static
             # pool capacity at a uniform gamma
             per_ssm_depth.append(float(np.mean([depths[r] for r in rids])))
-            cand = self._draft_pool(j, max(depths[r] for r in rids), depths)
-            rows = pool.rows(rids)
-            for rid, row in zip(rids, rows):
-                drafts[rid] = cand[row, :depths[rid]]
+            per_ssm_vextra.append(float(np.mean(
+                [self._beff(depths[r]) - 1 for r in rids])))
+            width = max(depths[r] for r in rids)
+            if self.tree:
+                cand, branch_map = self._draft_pool_tree(
+                    j, width, depths, rids)
+                for rid in rids:
+                    drafts[rid] = [cand[row, :kk]
+                                   for row, kk in branch_map[rid]]
+            else:
+                cand = self._draft_pool(j, width, depths)
+                rows = pool.rows(rids)
+                for rid, row in zip(rids, rows):
+                    drafts[rid] = cand[row, :depths[rid]]
         self.total_drafted += sum(depths.values())
+        self.verify_tokens_total += sum(
+            depths[rid] + self._beff(depths[rid]) for rid in ids)
 
         # verification (functional, full batch; per-row depth masking)
         n_acc, out, out_len = self._verify(ids, drafts, depths)
@@ -545,11 +606,13 @@ class SpinEngine:
         # the adaptive gamma policy
         accept_rates = self._accept_rates_per_ssm(assign, ids, n_acc, depths)
         kv_cells_per_req = self._kv_cells_per_ssm(assign, ids, depths)
+        vextra = per_ssm_vextra if self.tree else None
         if self.ecfg.use_pipeline:
             mb = self.ecfg.micro_batches or P.choose_micro_batches(
                 self.cost, per_ssm_batch, accept_rates,
                 kv_cells_per_req=kv_cells_per_req,
-                depth_per_req=per_ssm_depth)[0]
+                depth_per_req=per_ssm_depth,
+                verify_extra_per_req=vextra)[0]
         else:
             mb = [1] * len(self.ssms)
         # mixed slot: chunk-prefill work issued this step (and monolithic
@@ -558,7 +621,8 @@ class SpinEngine:
         pre_t, pre_n = self._consume_prefill()
         slot = self._simulate_slot(per_ssm_batch, mb, kv_cells_per_req,
                                    prefill_time=pre_t,
-                                   depth_per_req=per_ssm_depth)
+                                   depth_per_req=per_ssm_depth,
+                                   verify_extra_per_req=vextra)
 
         # commit tokens, update request state, observe goodput + acceptance
         self.sim_time += slot.makespan
@@ -685,6 +749,117 @@ class SpinEngine:
         pool.invalidate_rows(idle)
         return np.asarray(cand)
 
+    # ----------------------------------------------------- tree helpers --
+    @staticmethod
+    def _brid(rid: int, j: int):
+        """Synthetic pool key for branch j of request rid — tuples never
+        collide with real (integer) request ids."""
+        return ("~branch", rid, j)
+
+    def _beff(self, k) -> int:
+        """Effective branch count of a depth-k grant: every branch drafts
+        at least one token, so min(branches, k); 1 in linear mode."""
+        return max(1, min(self.branches, int(k))) if self.tree else 1
+
+    def _draft_pool_tree(self, j: int, width: int, depths, rids):
+        """Tree drafting on SSM j: fork a CoW pool row per extra branch,
+        draft every row greedily with per-row first-step top-k ranks
+        (identical context in forked rows means identical step-1 logits,
+        so each row self-selects its branch without cross-row
+        communication), then evict the fork rows — their chains live on
+        as verify candidates, and accepted tokens re-enter the main row
+        via the catch-up decode.  Returns (cand (capacity, width),
+        branch_map: rid -> [(row, k_j), ...] branch-ordered)."""
+        b = self.ssms[j]
+        pool = self.ssm_pools[j]
+        # cover draft writes + catch-up hole on the resident (main) rows
+        pool.ensure_rows({
+            rid: int(pool.lengths[row]) + depths.get(rid, width) + 2
+            for rid, row in pool.row_of.items()})
+        # stale switch residents may hold rows the forks need: the pool
+        # has batch_limits * branches rows, so evicting non-assigned
+        # residents always frees enough
+        need = sum(self._beff(depths[rid]) - 1 for rid in rids)
+        free = pool.capacity - len(pool.row_of)
+        if free < need:
+            keep = set(rids)
+            for victim in [r for r in pool.row_of if r not in keep]:
+                pool.evict(victim)
+                free += 1
+                if free >= need:
+                    break
+        branch_map = {}
+        forked = []
+        for rid in rids:
+            bd = D.split_tree_depths(depths[rid], self.branches)
+            L = int(pool.lengths[pool.row_of[rid]])
+            entries = [(pool.row_of[rid], bd[0])]
+            for jj in range(1, len(bd)):
+                brid = self._brid(rid, jj)
+                entries.append((pool.fork(rid, brid), bd[jj]))
+                forked.append(brid)
+            if len(bd) > 1:
+                for jj in range(1, len(bd)):
+                    pool.cow_prepare(self._brid(rid, jj), L, L + width + 2)
+                pool.cow_prepare(rid, L, L + width + 2)
+            branch_map[rid] = entries
+        ranks = np.zeros(pool.capacity, np.int32)
+        for rid in rids:
+            for bi, (row, _) in enumerate(branch_map[rid]):
+                ranks[row] = bi
+        lengths = jnp.asarray(pool.lengths, jnp.int32)
+        tok = jnp.asarray(pool.last_token, jnp.int32)[:, None]
+        # keep the rng stream aligned with the linear draft path
+        self.rng, _ = jax.random.split(self.rng)
+        bt, _ = pool.block_table_array()
+        cand, cache = sd.draft_tree(b, pool.cache, tok, lengths, width,
+                                    ranks, block_tables=bt)
+        pool.cache = cache
+        for brid in forked:
+            pool.evict(brid)
+        return np.asarray(cand), branch_map
+
+    def _tree_block_maps(self, ids_np, owner_np, tree_rows, W: int):
+        """Per-slot tree metadata for the packed gather: block owners of
+        branch rows remap to the request's main row (the verify segment),
+        and every gathered KV slot gets a tree-node tag — -1 committed
+        (attendable via segment + causality alone), -2 dead (a branch's
+        CoW copy of committed straddle cells, which would otherwise be
+        softmax-counted twice, or a padding slot past the branch's
+        depth), n >= 0 a tree node attendable only by queries whose
+        ancestor bitmask has bit n set."""
+        pool = self.llm_pool
+        bs = pool.block_size
+        seg_of_row = {row: seg for row, (seg, _, _) in tree_rows.items()}
+        owner_seg = np.array(
+            [seg_of_row.get(int(o), int(o)) if o >= 0 else -1
+             for o in owner_np], np.int32)
+        id2m = {int(blk): m for m, blk in enumerate(ids_np)
+                if owner_np[m] >= 0}
+        node = np.full((len(ids_np), bs), -1, np.int32)
+        for row, (seg_row, off, k) in tree_rows.items():
+            L = int(pool.lengths[row])
+            nb = int(pool._nb[row])
+            if row != seg_row and L % bs:
+                # branch rows own a private copy of the straddling tail
+                # block; its committed cells [L - L%bs, L) duplicate the
+                # main row's originals — dead-tag the copies
+                bi0 = L // bs
+                if bi0 < nb:
+                    m = id2m.get(int(pool._table[row, bi0]))
+                    if m is not None:
+                        node[m, :L % bs] = -2
+            for d in range(W + 1):
+                p = L + d
+                bi = p // bs
+                if bi >= nb:
+                    break        # writes past the table were dropped
+                m = id2m.get(int(pool._table[row, bi]))
+                if m is None:
+                    continue
+                node[m, p % bs] = (off + d) if d <= k else -2
+        return owner_seg, node
+
     def _verify(self, ids, drafts, depths):
         """LLM verification over the full pool (padded or packed).
 
@@ -696,19 +871,60 @@ class SpinEngine:
         the rollback scrub window like any rejected draft."""
         W = max(depths[rid] for rid in ids)
         N = self.llm_pool.capacity
+        # tree mode: fork a CoW row per extra branch BEFORE capturing the
+        # pool arrays — each branch verifies its own root copy + chain
+        # through its own (prefix-shared) block table
+        fork_rows: Dict[int, list] = {}
+        tree_rows = None
+        if self.tree:
+            tree_rows = {}
+            for rid in ids:
+                bd = D.split_tree_depths(depths[rid], self.branches)
+                mrow = self.llm_pool.row_of[rid]
+                L = int(self.llm_pool.lengths[mrow])
+                lst = []
+                for jj in range(1, len(bd)):
+                    brid = self._brid(rid, jj)
+                    brow = self.llm_pool.fork(rid, brid)
+                    lst.append((jj, brid, brow))
+                    self.tree_forks += 1
+                if lst:
+                    # un-share the speculation window: every branch (and
+                    # the main row, last so it keeps the originals) writes
+                    # through private block copies
+                    for jj, brid, brow in lst:
+                        self.llm_pool.cow_prepare(brid, L, L + W + 2)
+                    self.llm_pool.cow_prepare(rid, L, L + W + 2)
+                fork_rows[rid] = lst
+                tree_rows[mrow] = (mrow, 0, bd[0])
+                off = bd[0] + 1
+                for jj, brid, brow in lst:
+                    tree_rows[brow] = (mrow, off, bd[jj])
+                    off += bd[jj] + 1
         cand = np.zeros((N, W), np.int32)
         k_row = np.zeros(N, np.int64)
         lengths = jnp.asarray(self.llm_pool.lengths, jnp.int32)
         last = jnp.asarray(self.llm_pool.last_token, jnp.int32)[:, None]
         rows = self.llm_pool.rows(ids)
         for rid, row in zip(ids, rows):
-            d = drafts.get(rid, np.zeros(depths[rid], np.int32))
-            cand[row, :len(d)] = d
-            k_row[row] = depths[rid]
+            if self.tree:
+                bd = D.split_tree_depths(depths[rid], self.branches)
+                chains = drafts.get(
+                    rid, [np.zeros(kk, np.int32) for kk in bd])
+                cand[row, :len(chains[0])] = chains[0]
+                k_row[row] = bd[0]
+                for (jj, brid, brow) in fork_rows[rid]:
+                    cand[brow, :len(chains[jj])] = chains[jj]
+                    k_row[brow] = bd[jj]
+            else:
+                d = drafts.get(rid, np.zeros(depths[rid], np.int32))
+                cand[row, :len(d)] = d
+                k_row[row] = depths[rid]
         cand = jnp.asarray(cand)
 
         if self.ecfg.use_packed_verify:
-            logits = self._verify_packed(cand, lengths, last, W)
+            logits = self._verify_packed(cand, lengths, last, W,
+                                         tree_rows=tree_rows)
         else:
             inp = jnp.concatenate([last, cand], axis=1)
             if self.paged:
@@ -732,6 +948,31 @@ class SpinEngine:
                             jnp.pad(cand, ((0, 0), (0, 1))), 0)
         bonus = jnp.take_along_axis(greedy, n_acc_all[:, None], axis=1)
         out_all = out_all.at[jnp.arange(N), n_acc_all].set(bonus[:, 0])
+
+        # tree: adopt the winning branch per request — the row with the
+        # longest accepted root-to-leaf path keeps the request id (its CoW
+        # copies become canonical); losers are evicted in O(branches),
+        # dropping refs so shared prefix blocks survive via the winner.
+        # Under greedy verification at most one branch accepts >= 1 token
+        # (branches differ at their first draft and only the one matching
+        # the LLM argmax can accept), so ties land on branch 0 and the
+        # bonus token is the LLM's own pick — lossless at any shape.
+        winner_row = {rid: row for rid, row in zip(ids, rows)}
+        if self.tree:
+            n_acc_np = np.asarray(n_acc_all)
+            for rid in ids:
+                best_j, best_row = 0, winner_row[rid]
+                for (jj, brid, brow) in fork_rows[rid]:
+                    if int(n_acc_np[brow]) > int(n_acc_np[best_row]):
+                        best_j, best_row = jj, brow
+                if best_j != 0:
+                    self.llm_pool.evict(rid)
+                    self.llm_pool.rename(self._brid(rid, best_j), rid)
+                    self.tree_adoptions += 1
+                for (jj, brid, brow) in fork_rows[rid]:
+                    if jj != best_j:
+                        self.llm_pool.evict(brid)
+                winner_row[rid] = best_row
 
         # rollback: keep accepted prefix only (paged: trim the tail block
         # in place — a W-wide seg scatter through the block table)
@@ -800,7 +1041,8 @@ class SpinEngine:
         n_acc = np.zeros(len(ids), np.int64)
         out = np.zeros((len(ids), W + 1), np.int64)
         out_len = np.zeros(len(ids), np.int64)
-        for i, (rid, row) in enumerate(zip(ids, rows)):
+        for i, rid in enumerate(ids):
+            row = winner_row[rid]
             n_acc[i] = int(n_acc_all[row])
             out[i] = np.asarray(out_all[row])
             out_len[i] = n_acc[i] + 1
@@ -812,23 +1054,39 @@ class SpinEngine:
             self.ssm_pools[j].last_token[srow] = out[i, n_acc[i]]
         return n_acc, out, out_len
 
-    def _verify_packed(self, cand, lengths, last, W: int):
+    def _verify_packed(self, cand, lengths, last, W: int, tree_rows=None):
         """Packed verification via request decomposition (§V-A) at the
         slot's max granted depth W.  Paged: the packed KV is the cohort's
         live blocks, gathered fragment-by-fragment from the pool — no flat
-        packed copy, no padded grid."""
+        packed copy, no padded grid.  ``tree_rows`` (tree mode) maps pool
+        row -> (main row, node offset, branch depth): the query layout
+        gains ancestor bitmasks, gathered slots gain node tags, and block
+        owners remap to the main row so branches attend the shared
+        prefix."""
         N = self.llm_pool.capacity
         if self.paged:
             bt, _ = self.llm_pool.block_table_array()
             ids_np, owner_np = self.llm_pool.live_blocks()
             lens_np = np.asarray(self.llm_pool.lengths, np.int64)
-            q_rows, q_pos, q_seg = D.build_query_layout(lens_np, W)
             inp = jnp.concatenate([last, cand], axis=1)   # (N, W+1)
-            logits, cache = self.llm.verify_paged(
-                self.llm_pool.cache, inp.reshape(1, -1),
-                jnp.asarray(q_pos.astype(np.int32)),
-                jnp.asarray(q_seg), jnp.asarray(q_rows), bt,
-                jnp.asarray(ids_np), jnp.asarray(owner_np))
+            if tree_rows is not None:
+                q_rows, q_pos, q_seg, q_anc = D.build_tree_row_layout(
+                    lens_np, W, tree_rows)
+                owner_np, block_node = self._tree_block_maps(
+                    ids_np, owner_np, tree_rows, W)
+                logits, cache = self.llm.verify_paged_tree(
+                    self.llm_pool.cache, inp.reshape(1, -1),
+                    jnp.asarray(q_pos.astype(np.int32)),
+                    jnp.asarray(q_seg), jnp.asarray(q_rows), bt,
+                    jnp.asarray(ids_np), jnp.asarray(owner_np),
+                    jnp.asarray(q_anc), jnp.asarray(block_node))
+            else:
+                q_rows, q_pos, q_seg = D.build_query_layout(lens_np, W)
+                logits, cache = self.llm.verify_paged(
+                    self.llm_pool.cache, inp.reshape(1, -1),
+                    jnp.asarray(q_pos.astype(np.int32)),
+                    jnp.asarray(q_seg), jnp.asarray(q_rows), bt,
+                    jnp.asarray(ids_np), jnp.asarray(owner_np))
             self.llm_pool.cache = cache
             return logits[0].reshape(N, W + 1, -1)
         lens_np = np.maximum(np.asarray(lengths), 1)
@@ -902,13 +1160,15 @@ class SpinEngine:
 
     def _simulate_slot(self, per_ssm_batch, mb, kv_cells_per_req=0.0,
                        prefill_time: float = 0.0,
-                       depth_per_req=None) -> P.SimResult:
+                       depth_per_req=None,
+                       verify_extra_per_req=None) -> P.SimResult:
         cost = self.cost
         if self.ecfg.straggler_mitigation:
             cost = self._with_straggler_mitigation(cost, per_ssm_batch)
         return P.simulate(cost, per_ssm_batch, mb, kv_cells_per_req,
                           prefill_time=prefill_time,
-                          depth_per_req=depth_per_req)
+                          depth_per_req=depth_per_req,
+                          verify_extra_per_req=verify_extra_per_req)
 
     def _with_straggler_mitigation(self, cost, per_ssm_batch):
         """Inject random stragglers; mitigation re-dispatches the straggling
@@ -947,6 +1207,11 @@ class SpinEngine:
             "kv_blocks": (self.llm_pool.num_blocks if self.paged else None),
             "prefill_chunk": (self.ecfg.prefill_chunk if self.chunked
                               else 0),
+            "spec_shape": "tree" if self.tree else "linear",
+            "spec_branches": self.branches,
+            "verify_tokens": self.verify_tokens_total,
+            "tree_forks": self.tree_forks,
+            "tree_adoptions": self.tree_adoptions,
             "gamma": self.gamma_ctl.stats,
             "accepted_tokens": self.accepted_tokens,
             "prefill_tokens": self.prefill_tokens_total,

@@ -134,19 +134,29 @@ def make_paged_decode_override(block_tables, num_blocks: int, bs: int):
 
 
 def make_paged_verify_override(q_rows, block_tables, block_ids, block_owner,
-                               num_blocks: int, bs: int):
+                               num_blocks: int, bs: int,
+                               q_anc=None, block_node=None):
     """Attention override for SPIN packed verification over a paged pool.
 
     q_rows: (Tq,) pool row per flattened query token; block_ids /
     block_owner: (M,) live physical blocks of the verified cohort and the
     row owning each (-1 owner = padding entry).  The packed KV is gathered
     fragment-by-fragment — no flat packed copy, no padded grid.
+
+    Optional tree-speculation topology: ``q_anc`` (Tq,) is the per-query
+    ancestor bitmask and ``block_node`` (M, bs) tags each gathered slot
+    with its tree-node id (-1 committed, -2 dead, n >= 0 tree node); both
+    omitted reduces to the linear Eq. 13 mask exactly.
     """
     q_rows = jnp.asarray(q_rows, jnp.int32)
     bt = block_tables.astype(jnp.int32)
     ids = jnp.maximum(jnp.asarray(block_ids, jnp.int32), 0)
     owner = jnp.asarray(block_owner, jnp.int32)
     M = ids.shape[0]
+    anc = None if q_anc is None else \
+        jnp.asarray(q_anc, jnp.int32).reshape(1, -1)
+    node = None if block_node is None else \
+        jnp.asarray(block_node, jnp.int32).reshape(1, M * bs)
 
     def override(q, k_new, v_new, positions, segments, kv_cache, cfg, opts):
         # q/k_new/v_new: (1, Tq, ·, hd); positions/segments: (1, Tq) with
@@ -171,7 +181,8 @@ def make_paged_verify_override(q_rows, block_tables, block_ids, block_owner,
                          jnp.repeat(owner, bs), -1)[None]
         o = attention(q, kg, vg, q_positions=positions, kv_positions=posg,
                       q_segments=segments, kv_segments=segg,
-                      window=cfg.sliding_window, q_block=opts.q_block)
+                      window=cfg.sliding_window, q_block=opts.q_block,
+                      q_anc=anc, kv_node=node)
         return o, new_cache
 
     return override
@@ -202,11 +213,14 @@ def decode_step_paged(params, cfg, cache, *, tokens, lengths, block_tables,
 
 def verify_step_paged(params, cfg, cache, *, tokens, positions, segments,
                       q_rows, block_tables, block_ids, block_owner,
+                      q_anc=None, block_node=None,
                       opts: T.Opts = T.Opts()):
-    """Paged analogue of ``transformer.verify_step_packed``."""
+    """Paged analogue of ``transformer.verify_step_packed``; optional
+    ``q_anc``/``block_node`` add the token-tree topology mask term."""
     num_blocks, bs = pool_dims(cache)
     override = make_paged_verify_override(q_rows, block_tables, block_ids,
-                                          block_owner, num_blocks, bs)
+                                          block_owner, num_blocks, bs,
+                                          q_anc=q_anc, block_node=block_node)
     return T.verify_step_packed(params, cfg, cache, tokens=tokens,
                                 positions=positions, segments=segments,
                                 attn_override=override, opts=opts)

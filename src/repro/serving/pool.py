@@ -11,7 +11,13 @@ Two layouts share one interface (``has/insert/evict/rows/lengths/...``):
     capacity); decode growth appends one block at a time; eviction /
     preemption returns blocks to the free list in O(1) — no cache traffic.
     Rollback of rejected drafts trims the tail block in place (a
-    ``gamma``-wide seg scatter).  Attention-only models (recurrent state is
+    ``gamma``-wide seg scatter).  Blocks carry copy-on-write refcounts:
+    ``fork`` aliases a whole row in O(row blocks) with zero cache traffic,
+    ``cow_prepare`` copies only the shared blocks a write is about to
+    touch, and ``evict`` returns a block to the free list only when its
+    last reference drops — the substrate for tree speculation, where every
+    draft branch forks the main row and loses or wins in O(branches).
+    Attention-only models (recurrent state is
     O(1)/request and stays dense); see ``serving/paged.py`` for how the
     model forward addresses the pool.
 
@@ -232,6 +238,23 @@ def _blocks_invalidate(pool_tree, ids):
     return _map_attn_entries(pool_tree, go)
 
 
+def _blocks_copy(pool_tree, src, dst):
+    """Copy whole physical blocks ``src[i] -> dst[i]`` (all leaves, all
+    slots) — the copy-on-write materialisation.  Traced id vectors;
+    padding entries carry an out-of-range dst and are dropped by the
+    scatter (their src is clamped to a valid block by the gather)."""
+    def go(entry, stacked, name):
+        out = {}
+        for leaf in ("k", "v", "pos", "seg"):
+            p = entry[leaf]
+            if stacked:
+                out[leaf] = p.at[:, dst].set(p[:, src])
+            else:
+                out[leaf] = p.at[dst].set(p[src])
+        return out
+    return _map_attn_entries(pool_tree, go)
+
+
 def _span_invalidate(pool_tree, table, new_lengths, upper, *, bs: int,
                      W: int, num_blocks: int):
     """Per-row seg=-1 for positions [new_lengths, upper) — the rejected-
@@ -288,6 +311,7 @@ class PagedCachePool:
         self._free_blocks = list(range(self.num_blocks))
         self._table = np.full((capacity, self.blocks_per_row), -1, np.int32)
         self._nb = np.zeros(capacity, np.int32)      # allocated blocks/row
+        self._ref = np.zeros(self.num_blocks, np.int32)  # CoW refcounts
         self._jit: Dict[tuple, object] = {}          # (kind, statics) -> fn
 
     # --------------------------------------------------------- accounting --
@@ -304,7 +328,23 @@ class PagedCachePool:
 
     @property
     def allocated_blocks(self) -> int:
-        return int(self._nb.sum())
+        # UNIQUE live blocks (a CoW-shared block counts once) so that
+        # ``free_blocks + allocated_blocks == num_blocks`` stays an
+        # identity under forking; fork-free this equals ``_nb.sum()``.
+        return int(np.count_nonzero(self._ref))
+
+    def ref_count(self, rid: int, block_index: int) -> int:
+        """Refcount of the row's ``block_index``-th block (CoW probes)."""
+        return int(self._ref[int(self._table[self.row_of[rid], block_index])])
+
+    def shared_span(self, rid: int, start: int, end: int) -> bool:
+        """True iff any block covering cells [start, end) is CoW-shared."""
+        row = self.row_of[rid]
+        bs = self.block_size
+        lo = max(0, int(start)) // bs
+        hi = min(int(self._nb[row]), math.ceil(max(int(end), 0) / bs))
+        return any(self._ref[int(self._table[row, bi])] > 1
+                   for bi in range(lo, hi))
 
     def blocks_needed(self, length: int) -> int:
         return min(self.blocks_per_row,
@@ -332,7 +372,7 @@ class PagedCachePool:
         key = (kind,) + tuple(sorted(statics.items()))
         if key not in self._jit:
             base = {"write": _blocks_write, "inval": _blocks_invalidate,
-                    "span": _span_invalidate}[kind]
+                    "span": _span_invalidate, "copy": _blocks_copy}[kind]
             fn = functools.partial(base, **statics) if statics else base
             # donate the pool tree: the scatter updates the block pool IN
             # PLACE instead of copying it — this is what makes admission
@@ -348,7 +388,10 @@ class PagedCachePool:
                 f"paged pool out of blocks: need {n}, "
                 f"free {len(self._free_blocks)}/{self.num_blocks} — the "
                 f"scheduler's block accounting should have preempted first")
-        return [self._free_blocks.pop() for _ in range(n)]
+        ids = [self._free_blocks.pop() for _ in range(n)]
+        for b in ids:
+            self._ref[b] = 1
+        return ids
 
     def insert(self, rid: int, one_cache, length: int, last_token: int):
         """Admit a prefilled batch-1 cache: allocate the prompt's blocks and
@@ -426,13 +469,77 @@ class PagedCachePool:
         arr[:len(new_ids)] = new_ids
         self.cache = self._fn("inval")(self.cache, jnp.asarray(arr))
 
+    def fork(self, rid: int, new_rid: int) -> int:
+        """Copy-on-write fork: grant ``new_rid`` a row whose block table
+        ALIASES every block of ``rid`` — refcounts are bumped, no cache
+        traffic moves.  Writes into the shared span must be preceded by
+        ``cow_prepare`` (the write paths stay oblivious to sharing)."""
+        if new_rid in self.row_of:
+            raise ValueError(f"fork target rid {new_rid} already live")
+        if not self._free_rows:
+            raise RuntimeError("paged pool out of rows for fork")
+        src = self.row_of[rid]
+        row = self._free_rows.pop()
+        nb = int(self._nb[src])
+        self._table[row, :nb] = self._table[src, :nb]
+        self._nb[row] = nb
+        self.lengths[row] = self.lengths[src]
+        self.last_token[row] = self.last_token[src]
+        self.row_of[new_rid] = row
+        for b in self._table[src, :nb]:
+            self._ref[int(b)] += 1
+        return row
+
+    def cow_prepare(self, rid: int, start: int, end: int) -> int:
+        """Make the blocks covering cells [start, end) exclusive to
+        ``rid``: every CoW-shared block (ref > 1) in the span is copied
+        into a freshly allocated block (one jitted whole-block copy for
+        the batch), the row's table repointed, and the original's
+        refcount dropped.  Returns the number of blocks copied."""
+        row = self.row_of[rid]
+        bs = self.block_size
+        lo = max(0, int(start)) // bs
+        hi = min(int(self._nb[row]), math.ceil(max(int(end), 0) / bs))
+        src: List[int] = []
+        dst: List[int] = []
+        for bi in range(lo, hi):
+            blk = int(self._table[row, bi])
+            if self._ref[blk] > 1:
+                new = self._alloc(1)[0]
+                self._ref[blk] -= 1       # ref > 1, so never frees here
+                self._table[row, bi] = new
+                src.append(blk)
+                dst.append(new)
+        if src:
+            m = _pow2(len(src))           # bucket: bounded retraces
+            s = np.zeros(m, np.int32)
+            d = np.full(m, self.num_blocks, np.int32)
+            s[:len(src)] = src
+            d[:len(dst)] = dst
+            self.cache = self._fn("copy")(
+                self.cache, jnp.asarray(s), jnp.asarray(d))
+        return len(src)
+
+    def rename(self, rid: int, new_rid: int):
+        """Re-key a live row (winner-branch adoption after tree verify:
+        the surviving fork takes over the original request id)."""
+        if new_rid in self.row_of:
+            raise ValueError(f"rename target rid {new_rid} already live")
+        self.row_of[new_rid] = self.row_of.pop(rid)
+
     def evict(self, rid: int):
-        """Free the row and return its blocks — O(1), no cache traffic
-        (stale blocks are unreachable without a table entry and re-
-        invalidated on re-allocation)."""
+        """Free the row and drop one reference per block; blocks return
+        to the free list only at refcount zero (CoW siblings keep shared
+        blocks alive) — O(row blocks), no cache traffic (stale blocks are
+        unreachable without a table entry and re-invalidated on
+        re-allocation)."""
         row = self.row_of.pop(rid)
         nb = int(self._nb[row])
-        self._free_blocks.extend(int(b) for b in self._table[row, :nb])
+        for b in self._table[row, :nb]:
+            b = int(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free_blocks.append(b)
         self._table[row, :nb] = -1
         self._nb[row] = 0
         self.lengths[row] = 0
@@ -458,13 +565,24 @@ class PagedCachePool:
 
     def live_blocks(self) -> Tuple[np.ndarray, np.ndarray]:
         """(block_ids, owner_rows) over all live rows, padded to a power-of
-        -two length with (0, -1) entries (owner -1 = skip)."""
+        -two length with (0, -1) entries (owner -1 = skip).  CoW-shared
+        blocks are listed ONCE, under the first row encountered — listing
+        a physical block twice would double its slots in the packed
+        softmax denominator.  (Forks only share within one request, and
+        all of a request's rows map to the same verify segment, so the
+        first-seen owner is always segment-correct.)"""
         ids: List[int] = []
         owner: List[int] = []
+        seen = set()
         for rid, row in self.row_of.items():
             nb = int(self._nb[row])
-            ids.extend(int(b) for b in self._table[row, :nb])
-            owner.extend([row] * nb)
+            for b in self._table[row, :nb]:
+                b = int(b)
+                if b in seen:
+                    continue
+                seen.add(b)
+                ids.append(b)
+                owner.append(row)
         m = _pow2(max(1, len(ids)))
         ids += [0] * (m - len(ids))
         owner += [-1] * (m - len(owner))

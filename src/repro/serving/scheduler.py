@@ -113,6 +113,12 @@ class SchedulerConfig:
     # (gamma+1 tokens each) and prefill chunks.  None = decode always
     # proceeds and every prefilling request gets a full chunk.
     token_budget: Optional[int] = None
+    # tree speculation: each extra branch forks the request's row
+    # copy-on-write, which can copy the straddling tail block plus the
+    # branch's share of the speculation window — kv_need reserves that
+    # worst case per extra branch so admission cannot over-commit the
+    # block pool.  1 = linear (no reservation).
+    spec_branches: int = 1
 
 
 @dataclasses.dataclass
@@ -231,6 +237,11 @@ class ContinuousScheduler:
         if self.cfg.block_size > 0:
             b = self.cfg.block_size
             need = -(-need // b) * b
+            if self.cfg.spec_branches > 1:
+                # per extra branch: CoW copies of the blocks covering the
+                # speculation window plus the straddling tail block
+                per_branch = (-(-(self.cfg.gamma + 2) // b) + 1) * b
+                need += (self.cfg.spec_branches - 1) * per_branch
         return need
 
     def prefill_target(self, r: Request) -> int:

@@ -101,6 +101,175 @@ def test_verify_attention_isolation():
                                   np.asarray(out2)[rows0])
 
 
+# ------------------------------------------- verify_attention, tree mask --
+
+def _tree_layout(lens, branch_depths, row_align=8, dead=2):
+    """Packed layout with a token tree per request: committed prefix
+    (node -1), then per branch a root copy + chain (nodes off..off+k,
+    one query per node with its ancestor bitmask), then ``dead`` CoW
+    straddle-duplicate slots (node -2) whose values must never leak."""
+    kv_seg, kv_pos, kv_node = [], [], []
+    q_seg, q_pos, q_anc = [], [], []
+    for i, (l, ks) in enumerate(zip(lens, branch_depths)):
+        kv_seg += [i] * l
+        kv_pos += list(range(l))
+        kv_node += [-1] * l
+        off = 0
+        for k in ks:
+            for d in range(k + 1):
+                kv_seg.append(i)
+                kv_pos.append(l + d)
+                kv_node.append(off + d)
+                q_seg.append(i)
+                q_pos.append(l + d)
+                q_anc.append(((1 << (d + 1)) - 1) << off)
+            off += k + 1
+        for _ in range(dead):
+            kv_seg.append(i)
+            kv_pos.append(max(0, l - 1))   # inside the causal window
+            kv_node.append(-2)
+        pad = (row_align - len(kv_seg) % row_align) % row_align
+        kv_seg += [-1] * pad
+        kv_pos += [-1] * pad
+        kv_node += [-1] * pad
+    return (np.array(kv_seg, np.int32), np.array(kv_pos, np.int32),
+            np.array(kv_node, np.int32), np.array(q_seg, np.int32),
+            np.array(q_pos, np.int32), np.array(q_anc, np.int32))
+
+
+def test_tree_mask_equals_duplicated_prefix_semantics():
+    """Ground truth for the tree mask itself: a shared-prefix token tree
+    with node tags must produce exactly what you would get by flattening
+    every branch into its own segment with a PRIVATE copy of the prefix
+    (the mask-free linear layout tree speculation exists to avoid)."""
+    H, Kh, D = 4, 2, 16
+    lens = [13, 7]
+    branch_depths = [[2, 1, 0], [3, 2]]
+    kv_seg, kv_pos, kv_node, q_seg, q_pos, q_anc = _tree_layout(
+        lens, branch_depths, row_align=1, dead=2)
+    rng = np.random.default_rng(0)
+    kt = rng.normal(size=(len(kv_seg), Kh, D)).astype(np.float32)
+    vt = rng.normal(size=(len(kv_seg), Kh, D)).astype(np.float32)
+    qt = rng.normal(size=(len(q_seg), H, D)).astype(np.float32)
+    # poison the dead slots: they are masked, so they must not matter
+    kt[kv_node == -2] = 1e3
+    vt[kv_node == -2] = -1e3
+    got = ref.verify_attention_ref(
+        jnp.asarray(qt), jnp.asarray(kt), jnp.asarray(vt),
+        jnp.asarray(q_seg), jnp.asarray(q_pos), jnp.asarray(kv_seg),
+        jnp.asarray(kv_pos), jnp.asarray(q_anc), jnp.asarray(kv_node))
+    # flat layout: one segment per (request, branch), prefix duplicated
+    fk, fv, fseg, fpos = [], [], [], []
+    fq, fqseg, fqpos = [], [], []
+    qi = 0
+    seg_id = 0
+    for i, (l, ks) in enumerate(zip(lens, branch_depths)):
+        pre = np.where((kv_seg == i) & (kv_node == -1))[0][:l]
+        off = 0
+        for k in ks:
+            nodes = [np.where((kv_seg == i) & (kv_node == off + d))[0][0]
+                     for d in range(k + 1)]
+            for s in pre:
+                fk.append(kt[s])
+                fv.append(vt[s])
+                fseg.append(seg_id)
+                fpos.append(int(kv_pos[s]))
+            for d, s in enumerate(nodes):
+                fk.append(kt[s])
+                fv.append(vt[s])
+                fseg.append(seg_id)
+                fpos.append(l + d)
+                fq.append(qt[qi])
+                fqseg.append(seg_id)
+                fqpos.append(l + d)
+                qi += 1
+            off += k + 1
+            seg_id += 1
+    want = ref.verify_attention_ref(
+        jnp.asarray(np.stack(fq)), jnp.asarray(np.stack(fk)),
+        jnp.asarray(np.stack(fv)), jnp.asarray(np.array(fqseg, np.int32)),
+        jnp.asarray(np.array(fqpos, np.int32)),
+        jnp.asarray(np.array(fseg, np.int32)),
+        jnp.asarray(np.array(fpos, np.int32)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("lens,branch_depths,H,Kh,D,bq,bk", [
+    ([37, 61], [[2, 1], [3]], 8, 4, 32, 8, 32),
+    ([5, 5, 9], [[1, 1, 1], [0, 0], [4]], 4, 4, 16, 16, 16),
+    ([120], [[5, 4, 3]], 8, 2, 64, 8, 64),
+    ([33, 1], [[2, 2], [1, 0]], 4, 1, 32, 8, 16),
+])
+def test_verify_attention_tree_matches_oracle(lens, branch_depths,
+                                              H, Kh, D, bq, bk):
+    kv_seg, kv_pos, kv_node, q_seg, q_pos, q_anc = _tree_layout(
+        lens, branch_depths)
+    q = _rand(jax.random.PRNGKey(0), (len(q_seg), H, D), jnp.float32)
+    k = _rand(jax.random.PRNGKey(1), (len(kv_seg), Kh, D), jnp.float32)
+    v = _rand(jax.random.PRNGKey(2), (len(kv_seg), Kh, D), jnp.float32)
+    out = verify_attention(q, k, v, jnp.asarray(q_seg), jnp.asarray(q_pos),
+                           jnp.asarray(kv_seg), jnp.asarray(kv_pos),
+                           jnp.asarray(q_anc), jnp.asarray(kv_node),
+                           bq=bq, bk=bk, interpret=True)
+    want = ref.verify_attention_ref(q, k, v, jnp.asarray(q_seg),
+                                    jnp.asarray(q_pos), jnp.asarray(kv_seg),
+                                    jnp.asarray(kv_pos), jnp.asarray(q_anc),
+                                    jnp.asarray(kv_node))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-2)
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(1, 3))
+@settings(max_examples=12, deadline=None)
+def test_verify_attention_tree_property(seed, n):
+    """Randomized topologies: ragged prefix lengths, ragged branch
+    counts/depths (including empty-chain root-only branches)."""
+    rng = np.random.default_rng(seed)
+    lens = [int(x) for x in rng.integers(1, 60, n)]
+    branch_depths = [[int(d) for d in
+                      rng.integers(0, 5, int(rng.integers(1, 4)))]
+                     for _ in range(n)]
+    H, Kh, D = 4, 2, 16
+    kv_seg, kv_pos, kv_node, q_seg, q_pos, q_anc = _tree_layout(
+        lens, branch_depths)
+    q = _rand(jax.random.PRNGKey(3), (len(q_seg), H, D), jnp.float32)
+    k = _rand(jax.random.PRNGKey(4), (len(kv_seg), Kh, D), jnp.float32)
+    v = _rand(jax.random.PRNGKey(5), (len(kv_seg), Kh, D), jnp.float32)
+    out = verify_attention(q, k, v, jnp.asarray(q_seg), jnp.asarray(q_pos),
+                           jnp.asarray(kv_seg), jnp.asarray(kv_pos),
+                           jnp.asarray(q_anc), jnp.asarray(kv_node),
+                           bq=8, bk=16, interpret=True)
+    want = ref.verify_attention_ref(q, k, v, jnp.asarray(q_seg),
+                                    jnp.asarray(q_pos), jnp.asarray(kv_seg),
+                                    jnp.asarray(kv_pos), jnp.asarray(q_anc),
+                                    jnp.asarray(kv_node))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-3)
+
+
+def test_verify_attention_degenerate_tree_mask_is_linear():
+    """All-(-1) tree metadata must reduce to the mask-free call — the
+    exact arrays, not merely close ones (the b=1 bit-identity contract
+    rests on this)."""
+    H, Kh, D, gamma = 4, 2, 16, 3
+    lens = [24, 40]
+    kv_seg, kv_pos, q_seg, q_pos = _packed_layout(lens, gamma, row_align=8)
+    q = _rand(jax.random.PRNGKey(6), (len(q_seg), H, D), jnp.float32)
+    k = _rand(jax.random.PRNGKey(7), (len(kv_seg), Kh, D), jnp.float32)
+    v = _rand(jax.random.PRNGKey(8), (len(kv_seg), Kh, D), jnp.float32)
+    plain = verify_attention(q, k, v, jnp.asarray(q_seg),
+                             jnp.asarray(q_pos), jnp.asarray(kv_seg),
+                             jnp.asarray(kv_pos), bq=8, bk=8, interpret=True)
+    anc = jnp.full((len(q_seg),), -1, jnp.int32)
+    node = jnp.full((len(kv_seg),), -1, jnp.int32)
+    treed = verify_attention(q, k, v, jnp.asarray(q_seg),
+                             jnp.asarray(q_pos), jnp.asarray(kv_seg),
+                             jnp.asarray(kv_pos), anc, node,
+                             bq=8, bk=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(treed))
+
+
 # ------------------------------------------------------- flash_attention --
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -156,6 +156,126 @@ def test_paged_verify_isolation():
                                   np.asarray(out2)[rows0])
 
 
+def _tree_verify_setup(lens, branch_depths, bs, H, Kh, D, seed=0):
+    """Paged tree layout mirroring the engine's CoW fork geometry: each
+    request's committed prefix lives in shared blocks (node -1); each
+    branch owns private blocks covering its speculation window, whose
+    below-the-fork straddle cells are dead duplicates (node -2) and whose
+    tree cells carry node tags."""
+    rng = np.random.default_rng(seed)
+    blocks = []                   # (owner_seg, node_row, seg_row, pos_row)
+    q_seg, q_pos, q_anc = [], [], []
+    for i, (l, ks) in enumerate(zip(lens, branch_depths)):
+        for b0 in range(0, l, bs):
+            node = np.full(bs, -1, np.int32)
+            seg = np.full(bs, -1, np.int32)
+            pos = np.full(bs, -1, np.int32)
+            n = min(bs, l - b0)
+            seg[:n] = 0
+            pos[:n] = b0 + np.arange(n)
+            blocks.append((i, node, seg, pos))
+        off = 0
+        for k in ks:
+            lo = (l // bs) * bs           # branch copies start mid-block
+            for b0 in range(lo, l + k + 1, bs):
+                node = np.full(bs, -2, np.int32)
+                seg = np.full(bs, -1, np.int32)
+                pos = np.full(bs, -1, np.int32)
+                for s in range(bs):
+                    p = b0 + s
+                    if p < l:             # dead straddle duplicate
+                        seg[s] = 0
+                        pos[s] = p
+                    elif p <= l + k:      # tree node off + (p - l)
+                        seg[s] = 0
+                        pos[s] = p
+                        node[s] = off + (p - l)
+                blocks.append((i, node, seg, pos))
+            for d in range(k + 1):
+                q_seg.append(i)
+                q_pos.append(l + d)
+                q_anc.append(((1 << (d + 1)) - 1) << off)
+            off += k + 1
+    nb = len(blocks)
+    perm = rng.permutation(nb)            # fragmented physical placement
+    pool_seg = np.full((nb + 2, bs), -1, np.int32)
+    pool_pos = np.full((nb + 2, bs), -1, np.int32)
+    kp = np.asarray(rng.normal(size=(nb + 2, bs, Kh, D)), np.float32)
+    vp = np.asarray(rng.normal(size=(nb + 2, bs, Kh, D)), np.float32)
+    ids, owner, node_rows = [], [], []
+    for m, (own, node, seg, pos) in enumerate(blocks):
+        pb = int(perm[m])
+        pool_seg[pb] = seg
+        pool_pos[pb] = pos
+        # poison dead duplicates: masked slots must not leak into outputs
+        kp[pb, node == -2] = 1e3
+        vp[pb, node == -2] = -1e3
+        ids.append(pb)
+        owner.append(own)
+        node_rows.append(node)
+    ids += [0, 0]                         # bucketed-list padding entries
+    owner += [-1, -1]
+    node_rows += [np.full(bs, -1, np.int32)] * 2
+    q = _rand(jax.random.PRNGKey(9), (len(q_seg), H, D))
+    return (q, jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(pool_seg),
+            jnp.asarray(pool_pos), jnp.asarray(np.array(q_seg, np.int32)),
+            jnp.asarray(np.array(q_pos, np.int32)),
+            jnp.asarray(np.array(ids, np.int32)),
+            jnp.asarray(np.array(owner, np.int32)),
+            jnp.asarray(np.array(q_anc, np.int32)),
+            jnp.asarray(np.stack(node_rows)))
+
+
+@pytest.mark.parametrize("lens,branch_depths,bs", [
+    ([37, 61], [[2, 1], [3]], 16),
+    ([5, 9], [[1, 1, 1], [4]], 8),
+    ([120], [[5, 4, 3]], 32),
+    ([33, 1, 15], [[2, 2], [1, 0], [3]], 8),
+])
+def test_paged_verify_tree_matches_oracle(lens, branch_depths, bs):
+    H, Kh, D = 4, 2, 32
+    args = _tree_verify_setup(lens, branch_depths, bs, H, Kh, D, seed=5)
+    out = paged_verify_attention(*args, bq=8, interpret=True)
+    want = ref.paged_verify_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-2)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_paged_verify_tree_property(seed):
+    """Randomized tree topologies over randomized block sizes and ragged
+    prefix depths, fragmented placement included."""
+    rng = np.random.default_rng(seed)
+    bs = int(rng.choice([8, 16]))
+    n = int(rng.integers(1, 4))
+    lens = [int(x) for x in rng.integers(1, 70, n)]
+    branch_depths = [[int(d) for d in
+                      rng.integers(0, 5, int(rng.integers(1, 4)))]
+                     for _ in range(n)]
+    args = _tree_verify_setup(lens, branch_depths, bs, 4, 2, 16, seed=seed)
+    out = paged_verify_attention(*args, bq=8, interpret=True)
+    want = ref.paged_verify_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-3)
+
+
+def test_paged_verify_degenerate_tree_mask_is_linear():
+    """All-(-1) tree metadata must reproduce the mask-free paged call
+    bit-for-bit (the b=1 bit-identity contract)."""
+    lens, H, Kh, D, bs, gamma = [24, 40], 4, 2, 16, 8, 2
+    nb = sum(-(-l // bs) for l in lens) + 2
+    q, kp, vp, pseg, ppos, qs, qpos, ids, owner = _verify_setup(
+        lens, bs, nb, H, Kh, D, gamma, seed=6)
+    plain = paged_verify_attention(q, kp, vp, pseg, ppos, qs, qpos, ids,
+                                   owner, bq=8, interpret=True)
+    anc = jnp.full((qs.shape[0],), -1, jnp.int32)
+    node = jnp.full((ids.shape[0], bs), -1, jnp.int32)
+    treed = paged_verify_attention(q, kp, vp, pseg, ppos, qs, qpos, ids,
+                                   owner, anc, node, bq=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(treed))
+
+
 # ----------------------------------------------------- pool block ledger --
 
 def _pool(capacity=4, max_len=64, bs=8, num_blocks=None):

@@ -1,0 +1,154 @@
+"""Copy-on-write block-ledger property suite (ISSUE 6 satellite).
+
+Random interleavings of the full pool lifecycle — insert / append
+(ensure) / fork / cow_prepare / rename / evict — must preserve the CoW
+refcount invariants at every step:
+
+* the per-block refcount equals the number of table references to it;
+* a block is on the free list iff its refcount is zero (never free a
+  block something still points at, never leak an unreferenced one);
+* ``cow_prepare`` leaves its span exclusively owned — the engine's
+  write paths never write through a block another row still shares;
+* draining every row returns every block: free_blocks == num_blocks.
+"""
+
+import numpy as np
+from hypcompat import given, settings, st
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.serving.pool import PagedCachePool
+
+
+def _pool(capacity=6, max_len=64, bs=8, num_blocks=30):
+    cfg = registry.reduced_for("llama-68m", d_model=32, n_heads=4,
+                               n_kv_heads=4, vocab_size=64, n_layers=1)
+    return PagedCachePool(cfg, capacity, max_len, bs, num_blocks=num_blocks)
+
+
+def _one_cache(pool, length):
+    return T.init_cache(pool.cfg, 1, pool.prefill_len(max(16, length)))
+
+
+def _cow_ledger_ok(pool):
+    """The refcount invariants every mutation must preserve."""
+    tally = np.zeros(pool.num_blocks, np.int64)
+    for row in range(pool.capacity):
+        for b in pool._table[row, : pool._nb[row]]:
+            assert int(b) >= 0, "live table slot holds no block"
+            tally[int(b)] += 1
+    assert np.array_equal(tally, pool._ref), \
+        "refcounts drifted from the tables"
+    free = pool._free_blocks
+    assert len(set(free)) == len(free), "free list duplicates a block"
+    for b in free:
+        assert pool._ref[b] == 0, "freed a block with live references"
+    assert sorted(free) == np.where(tally == 0)[0].tolist(), \
+        "unreferenced block missing from the free list (leak)"
+    assert pool.free_blocks + pool.allocated_blocks == pool.num_blocks
+    ids_np, owner_np = pool.live_blocks()
+    live = [int(b) for b, o in zip(ids_np, owner_np) if int(o) >= 0]
+    assert len(set(live)) == len(live), "live view lists a block twice"
+    assert len(live) == pool.allocated_blocks
+
+
+_OP = st.tuples(
+    st.sampled_from(["insert", "grow", "fork", "cow", "rename", "evict"]),
+    st.integers(0, 5),              # rid (live keys may also be fork ids)
+    st.integers(1, 56),             # length / growth / span operand
+)
+
+
+@given(ops=st.lists(_OP, min_size=1, max_size=50))
+@settings(max_examples=20, deadline=None)
+def test_cow_lifecycle_preserves_refcount_invariants(ops):
+    pool = _pool()
+    forks = 0
+    for op, rid, arg in ops:
+        live = list(pool.row_of)
+        if op == "insert" and not pool.has(rid):
+            if pool.free_rows and pool.can_admit(arg):
+                pool.insert(rid, _one_cache(pool, arg), arg, 0)
+        elif op == "grow" and live:
+            key = live[rid % len(live)]
+            row = pool.row_of[key]
+            need = min(int(pool.lengths[row]) + arg, pool.max_len)
+            delta = pool.blocks_needed(need) - int(pool._nb[row])
+            # growth writes through the grown blocks: un-share them first
+            if 0 < delta <= pool.free_blocks and not pool.shared_span(
+                    key, 0, need):
+                pool.ensure(key, need)
+        elif op == "fork" and live and pool.free_rows:
+            src = live[rid % len(live)]
+            pool.fork(src, ("fork", forks))
+            forks += 1
+        elif op == "cow" and live:
+            key = live[rid % len(live)]
+            row = pool.row_of[key]
+            span = int(pool._nb[row]) * pool.block_size
+            lo = arg % max(span, 1)
+            hi = min(lo + 2 * pool.block_size, span)
+            shared = sum(
+                1 for bi in range(lo // pool.block_size,
+                                  -(-hi // pool.block_size))
+                if bi < pool._nb[row]
+                and pool._ref[int(pool._table[row, bi])] > 1)
+            if shared <= pool.free_blocks:
+                pool.cow_prepare(key, lo, hi)
+                assert not pool.shared_span(key, lo, hi), \
+                    "cow_prepare left a shared block writable in its span"
+        elif op == "rename" and live:
+            key = live[rid % len(live)]
+            if ("r", rid) not in pool.row_of:
+                pool.rename(key, ("r", rid))
+        elif op == "evict" and live:
+            pool.evict(live[rid % len(live)])
+        _cow_ledger_ok(pool)
+    for key in list(pool.row_of):
+        pool.evict(key)
+        _cow_ledger_ok(pool)
+    assert pool.free_blocks == pool.num_blocks, "drained pool leaked blocks"
+
+
+def test_fork_shares_then_cow_unshares_then_losers_release():
+    """Deterministic walk of the tree-verify block lifecycle: fork aliases
+    every block for free, cow_prepare privatizes only the written span,
+    and evicting either side keeps shared prefix blocks alive until the
+    last holder drops them."""
+    pool = _pool(capacity=4, max_len=64, bs=8, num_blocks=12)
+    pool.insert(0, _one_cache(pool, 20), 20, 1)          # 3 blocks
+    assert pool.allocated_blocks == 3
+    pool.fork(0, "b1")
+    # a fork moves no blocks: pure aliasing, refcounts bumped
+    assert pool.allocated_blocks == 3
+    for bi in range(3):
+        assert pool.ref_count(0, bi) == 2
+    assert pool.shared_span("b1", 16, 24)
+    # privatize the branch's speculation window [20, 23): copies only the
+    # straddle block, the prefix stays shared
+    assert pool.cow_prepare("b1", 20, 23) == 1
+    assert pool.allocated_blocks == 4
+    assert not pool.shared_span("b1", 16, 24)
+    assert pool.ref_count("b1", 2) == 1
+    assert pool.ref_count(0, 0) == 2 and pool.ref_count(0, 1) == 2
+    # loser eviction is O(branch blocks): the winner keeps the prefix
+    pool.evict(0)
+    assert pool.allocated_blocks == 3            # b1's 2 shared + 1 private
+    for bi in range(3):
+        assert pool.ref_count("b1", bi) == 1
+    # winner adoption re-keys the surviving row
+    pool.rename("b1", 0)
+    assert pool.has(0) and not pool.has("b1")
+    pool.evict(0)
+    assert pool.free_blocks == pool.num_blocks
+
+
+def test_fork_needs_a_free_row_and_unique_target():
+    import pytest
+    pool = _pool(capacity=2, max_len=64, bs=8, num_blocks=12)
+    pool.insert(0, _one_cache(pool, 10), 10, 1)
+    pool.fork(0, 1)
+    with pytest.raises(ValueError, match="already live"):
+        pool.fork(0, 1)
+    with pytest.raises(RuntimeError, match="out of rows"):
+        pool.fork(0, 2)
