@@ -115,6 +115,51 @@ def bench_decode_step(emit, llm):
          f"{int(bt.shape[1]) * BLOCK})")
 
 
+def bench_dispatch_counts(emit, llm):
+    """Per-step dispatch counts of the FULL model decode step, unfused
+    (XLA gather read) vs fused (single Pallas launch per attention site),
+    measured from the step jaxprs — the launch-count reduction is a
+    tracked metric, not just wall-clock (ISSUE 7)."""
+    from benchmarks.bench_kernels import count_primitives
+    from repro.kernels.autotune import DEFAULT_CONFIG
+    from repro.serving.paged import decode_step_paged
+
+    Bq = 4
+    paged = PagedCachePool(llm.cfg, Bq, MAX_LEN, BLOCK)
+    for r in range(Bq):
+        _, cp = _prefill(llm, PROMPT, paged.prefill_len(_bucket(PROMPT)))
+        paged.insert(r, cp, PROMPT, 1)
+        paged.ensure(r, PROMPT + 2)
+    lengths = jnp.asarray(paged.lengths, jnp.int32)
+    tok = jnp.asarray(paged.last_token, jnp.int32)[:, None]
+    bt, _ = paged.block_table_array()
+
+    def step(fused_cfg):
+        return lambda c, t, ln, b: decode_step_paged(
+            llm.params, llm.cfg, c, tokens=t, lengths=ln, block_tables=b,
+            fused_cfg=fused_cfg)[0]
+
+    cu = count_primitives(step(None), paged.cache, tok, lengths, bt)
+    cf = count_primitives(step(DEFAULT_CONFIG), paged.cache, tok,
+                          lengths, bt)
+
+    def total(c):
+        return c.get("gather", 0) + c.get("dot_general", 0) \
+            + c.get("pallas_call", 0)
+
+    red = total(cu) / max(total(cf), 1)
+    emit(f"paged_dispatch_per_step[B={Bq}]", 0.0,
+         f"reduction={red:.2f}x unfused={total(cu)} fused={total(cf)} "
+         f"(unfused: gather={cu.get('gather', 0)} "
+         f"dot={cu.get('dot_general', 0)} pallas={cu.get('pallas_call', 0)}"
+         f"; fused: gather={cf.get('gather', 0)} "
+         f"dot={cf.get('dot_general', 0)} "
+         f"pallas={cf.get('pallas_call', 0)})")
+    if red <= 1.0:
+        raise AssertionError(
+            f"fusion did not reduce per-step dispatches ({red:.2f}x)")
+
+
 def bench_concurrency(emit, llm):
     """Concurrent requests at the same physical KV-cell budget."""
     budget = 2048                           # cells of HBM for KV
@@ -173,6 +218,7 @@ def main(emit):
     llm, ssms = build_zoo(VOCAB, seed=0, n_ssms=2)
     bench_admission(emit, llm)
     bench_decode_step(emit, llm)
+    bench_dispatch_counts(emit, llm)
     ratio = bench_concurrency(emit, llm)
     identical = bench_equivalence(emit, llm, ssms)
     if ratio < 1.5:

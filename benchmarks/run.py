@@ -34,10 +34,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_batching, bench_chunked, bench_gamma,
-                            bench_heterogeneity, bench_overall, bench_paged,
-                            bench_pipeline, bench_router, bench_selector,
-                            bench_serving, bench_tree, bench_verification,
-                            roofline)
+                            bench_heterogeneity, bench_kernels, bench_overall,
+                            bench_paged, bench_pipeline, bench_router,
+                            bench_selector, bench_serving, bench_tree,
+                            bench_verification, roofline)
 
     records = []
     section_name = [""]
@@ -58,6 +58,7 @@ def main(argv=None) -> None:
         ("fig13 pipeline", bench_pipeline.main),
         ("serving scheduler", bench_serving.main),
         ("paged kv", bench_paged.main),
+        ("fused kernels", bench_kernels.main),
         ("chunked prefill", bench_chunked.main),
         ("gamma depth", bench_gamma.main),
         ("tree speculation", bench_tree.main),

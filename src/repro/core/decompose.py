@@ -31,6 +31,20 @@ from typing import Callable, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+# Tree speculation encodes each query's root-to-node path as a bitmask in
+# one int32 (kernels/verify_attention.py, kernels/paged_attention.py,
+# kernels/fused_verify.py), so the node budget per request is the mask
+# width.  Everything that validates tree shapes (engine construction,
+# launch/serve.py, build_tree_layout) derives its limit from here — a
+# wider mask dtype changes the budget in exactly one place.
+ANCESTOR_MASK_BITS = 32
+
+
+def max_tree_nodes() -> int:
+    """Largest per-request tree node count (= sum of (depth_j + 1) over
+    branches) the ancestor-bitmask verify kernels can express."""
+    return ANCESTOR_MASK_BITS
+
 
 @dataclasses.dataclass
 class PackPlan:
@@ -218,10 +232,11 @@ def build_tree_layout(lengths: Sequence[int], branch_depths) -> TreeLayout:
     offsets = []
     for i, (length, depths) in enumerate(zip(lengths, branch_depths)):
         total_nodes = sum(int(k) + 1 for k in depths)
-        if total_nodes > 32:
+        if total_nodes > max_tree_nodes():
             raise ValueError(
-                f"request {i}: {total_nodes} tree nodes exceed the 32-bit "
-                "ancestor mask (trim branches or depth)")
+                f"request {i}: {total_nodes} tree nodes exceed the "
+                f"{ANCESTOR_MASK_BITS}-bit ancestor mask (trim branches "
+                "or depth)")
         off, req_offsets = 0, []
         for j, k in enumerate(depths):
             k = int(k)

@@ -42,11 +42,15 @@ class Bundle:
         self._decode = jax.jit(
             lambda p, cache, toks, lengths: T.decode_step(
                 p, self.cfg, cache, tokens=toks, lengths=lengths))
-        self._decode_paged = None
-        self._verify_paged = None
-        self._verify_paged_tree = None
+        # paged entry points are cached per fused_cfg (None = XLA gather
+        # path; a kernels/autotune.FusedConfig = fused Pallas path) — the
+        # config is static under jit, so each distinct config is its own
+        # trace and flipping --fused-kernels never retraces the other path
+        self._decode_paged = {}
+        self._verify_paged = {}
+        self._verify_paged_tree = {}
         self._append = None
-        self._append_paged = None
+        self._append_paged = {}
 
     def prefill(self, toks, lengths, max_len):
         return self._prefill(self.params, toks, lengths, max_len)
@@ -65,64 +69,67 @@ class Bundle:
                     p, self.cfg, c, tokens=t, lengths=l, segments=s))
         return self._append(self.params, cache, toks, lengths, segments)
 
-    def append_paged(self, cache, toks, lengths, segments, block_tables):
+    def append_paged(self, cache, toks, lengths, segments, block_tables,
+                     fused_cfg=None):
         """Chunked-prefill append through a paged block pool: the (1, T)
         chunk writes straight into the row's blocks and attends its prior
         context blocks (see serving/paged.decode_step_paged)."""
-        if self._append_paged is None:
+        if fused_cfg not in self._append_paged:
             from repro.serving.paged import decode_step_paged
-            self._append_paged = jax.jit(
+            self._append_paged[fused_cfg] = jax.jit(
                 lambda p, c, t, l, s, bt: decode_step_paged(
                     p, self.cfg, c, tokens=t, lengths=l, segments=s,
-                    block_tables=bt))
-        return self._append_paged(self.params, cache, toks, lengths,
-                                  segments, block_tables)
+                    block_tables=bt, fused_cfg=fused_cfg))
+        return self._append_paged[fused_cfg](self.params, cache, toks,
+                                             lengths, segments, block_tables)
 
-    def decode_paged(self, cache, toks, lengths, block_tables):
+    def decode_paged(self, cache, toks, lengths, block_tables,
+                     fused_cfg=None):
         """Decode against a paged block pool (serving/pool.PagedCachePool).
         block_tables is a *traced* argument: table contents change every
         step without retracing."""
-        if self._decode_paged is None:
+        if fused_cfg not in self._decode_paged:
             from repro.serving.paged import decode_step_paged
-            self._decode_paged = jax.jit(
+            self._decode_paged[fused_cfg] = jax.jit(
                 lambda p, c, t, l, bt: decode_step_paged(
-                    p, self.cfg, c, tokens=t, lengths=l, block_tables=bt))
-        return self._decode_paged(self.params, cache, toks, lengths,
-                                  block_tables)
+                    p, self.cfg, c, tokens=t, lengths=l, block_tables=bt,
+                    fused_cfg=fused_cfg))
+        return self._decode_paged[fused_cfg](self.params, cache, toks,
+                                             lengths, block_tables)
 
     def verify_paged(self, cache, tokens, positions, segments, q_rows,
-                     block_tables, block_ids, block_owner):
+                     block_tables, block_ids, block_owner, fused_cfg=None):
         """Packed verification gathering KV fragments straight from the
         paged block pool (no flat packed copy)."""
-        if self._verify_paged is None:
+        if fused_cfg not in self._verify_paged:
             from repro.serving.paged import verify_step_paged
-            self._verify_paged = jax.jit(
+            self._verify_paged[fused_cfg] = jax.jit(
                 lambda p, c, t, pos, seg, qr, bt, ids, ow: verify_step_paged(
                     p, self.cfg, c, tokens=t, positions=pos, segments=seg,
                     q_rows=qr, block_tables=bt, block_ids=ids,
-                    block_owner=ow))
-        return self._verify_paged(self.params, cache, tokens, positions,
-                                  segments, q_rows, block_tables, block_ids,
-                                  block_owner)
+                    block_owner=ow, fused_cfg=fused_cfg))
+        return self._verify_paged[fused_cfg](
+            self.params, cache, tokens, positions, segments, q_rows,
+            block_tables, block_ids, block_owner)
 
     def verify_paged_tree(self, cache, tokens, positions, segments, q_rows,
                           block_tables, block_ids, block_owner, q_anc,
-                          block_node):
+                          block_node, fused_cfg=None):
         """Tree-topology packed verification: like :meth:`verify_paged`
         plus the ancestor-bitmask / per-slot node-tag mask term, so one
         pass scores every root-to-leaf path of a token tree."""
-        if self._verify_paged_tree is None:
+        if fused_cfg not in self._verify_paged_tree:
             from repro.serving.paged import verify_step_paged
-            self._verify_paged_tree = jax.jit(
+            self._verify_paged_tree[fused_cfg] = jax.jit(
                 lambda p, c, t, pos, seg, qr, bt, ids, ow, anc, node:
                 verify_step_paged(
                     p, self.cfg, c, tokens=t, positions=pos, segments=seg,
                     q_rows=qr, block_tables=bt, block_ids=ids,
-                    block_owner=ow, q_anc=anc, block_node=node))
-        return self._verify_paged_tree(self.params, cache, tokens, positions,
-                                       segments, q_rows, block_tables,
-                                       block_ids, block_owner, q_anc,
-                                       block_node)
+                    block_owner=ow, q_anc=anc, block_node=node,
+                    fused_cfg=fused_cfg))
+        return self._verify_paged_tree[fused_cfg](
+            self.params, cache, tokens, positions, segments, q_rows,
+            block_tables, block_ids, block_owner, q_anc, block_node)
 
     @property
     def has_recurrent_state(self) -> bool:
@@ -150,17 +157,18 @@ def sample(probs, rng):
 
 def draft(ssm: Bundle, cache, last_tokens, lengths, gamma: int, rng,
           temperature: float = 0.0, collect_probs: bool = False,
-          block_tables=None):
+          block_tables=None, fused_cfg=None):
     """Generate gamma candidates. last_tokens: (B,1) previous accepted token.
     Returns (cand (B,gamma), qprobs (B,gamma,V)|None, cache).
-    block_tables routes the decode steps through the paged KV pool."""
+    block_tables routes the decode steps through the paged KV pool;
+    fused_cfg additionally routes them through the fused Pallas kernel."""
     cands, qs = [], []
     tok = last_tokens
     for g in range(gamma):
         rng, k = jax.random.split(rng)
         if block_tables is not None:
             logits, cache = ssm.decode_paged(cache, tok, lengths + g,
-                                             block_tables)
+                                             block_tables, fused_cfg)
         else:
             logits, cache = ssm.decode(cache, tok, lengths + g)
         probs = logits_to_probs(logits[:, -1], temperature,
@@ -176,7 +184,7 @@ def draft(ssm: Bundle, cache, last_tokens, lengths, gamma: int, rng,
 
 
 def draft_tree(ssm: Bundle, cache, last_tokens, lengths, gamma: int, ranks,
-               block_tables=None):
+               block_tables=None, fused_cfg=None):
     """Greedy tree drafting: each pool row autoregressively extends ONE
     branch of a request's token tree.
 
@@ -196,7 +204,7 @@ def draft_tree(ssm: Bundle, cache, last_tokens, lengths, gamma: int, ranks,
     for g in range(gamma):
         if block_tables is not None:
             logits, cache = ssm.decode_paged(cache, tok, lengths + g,
-                                             block_tables)
+                                             block_tables, fused_cfg)
         else:
             logits, cache = ssm.decode(cache, tok, lengths + g)
         probs = logits_to_probs(logits[:, -1], 0.0, ssm.cfg.vocab_size)

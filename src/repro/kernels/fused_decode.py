@@ -1,0 +1,193 @@
+"""Fused paged decode kernel — per-row queries stream their block table.
+
+The XLA decode path gathers each row's live blocks into a
+``(B, nb_max * bs)`` copy and re-reads it through ``layers.attention``
+(two HBM round-trips over the live KV per layer).  This kernel reads the
+pool exactly once: the grid walks ``(row, kv tile)``, the KV BlockSpec
+index map resolves logical sub-block -> physical through the
+SMEM-prefetched block table before the DMA is issued, and segment /
+position masking + online softmax run inline on each tile.
+
+Unlike ``paged_attention.paged_decode_attention`` (single query token,
+contiguous-prefix validity) this kernel carries the serving engine's full
+decode shape: ``T`` query tokens per row (draft steps T=1, catch-up
+T=W+1, chunked-prefill appends at the bucketed chunk width) with per-token
+``q_seg``/``q_pos`` (seg -1 = bucket padding) and per-slot pool
+``seg``/``pos`` validity — the exact semantics of
+``serving/paged.make_paged_decode_override``, minus the gather copy.
+
+Tile knobs (searched by ``kernels/autotune.py``): ``bk`` sub-tiles each
+physical block (pool viewed as ``(N * f, bk, Kh, D)``), ``depth`` fetches
+that many KV tiles per grid step so their DMAs double-buffer against the
+previous tiles' attention compute.  Rows shorter than the longest row
+clamp trailing steps to their last live sub-block — the revisit elides
+the DMA and ``pl.when`` skips the compute, removing the per-step revisit
+stalls of a padded dense walk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _fused_decode_kernel(bt_ref, nlive_ref, q_seg_ref, q_pos_ref, q_ref,
+                         *refs, nsteps: int, depth: int, scale: float):
+    tiles = refs[:4 * depth]
+    o_ref, m_ref, l_ref, acc_ref = refs[4 * depth:]
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_seg = q_seg_ref[0]                    # (T,)
+    q_pos = q_pos_ref[0]
+
+    def _tile(i, pos_ref, seg_ref, k_ref, v_ref):
+        t = j * depth + i
+
+        @pl.when(t < nlive_ref[b])
+        def _compute():
+            q = q_ref[0].astype(jnp.float32) * scale        # (T, H, D)
+            k = k_ref[0].astype(jnp.float32)                # (bk, Kh, D)
+            v = v_ref[0].astype(jnp.float32)
+            T, H, D = q.shape
+            bk, Kh, _ = k.shape
+            G = H // Kh
+            kv_seg = seg_ref[0]             # (bk,) -1 = invalidated slot
+            kv_pos = pos_ref[0]
+            qg = q.reshape(T, Kh, G, D)
+            s = jax.lax.dot_general(
+                qg.transpose(1, 2, 0, 3).reshape(Kh, G * T, D),
+                k.transpose(1, 2, 0),
+                (((2,), (1,)), ((0,), (0,))))               # (Kh, G*T, bk)
+            s = s.reshape(Kh, G, T, bk).transpose(2, 0, 1, 3)
+            mask = (q_seg[:, None] == kv_seg[None, :]) \
+                & (kv_seg[None, :] >= 0) \
+                & (kv_pos[None, :] <= q_pos[:, None])       # (T, bk)
+            s = jnp.where(mask[:, None, None, :], s, NEG)
+
+            m_prev = m_ref[...].reshape(T, Kh, G)
+            l_prev = l_ref[...].reshape(T, Kh, G)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            m_safe = jnp.maximum(m_new, -1e29)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[:, None, None, :], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m_prev),
+                             jnp.exp(m_prev - m_safe), 0.0)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jax.lax.dot_general(
+                p.transpose(1, 2, 0, 3).reshape(Kh, G * T, bk),
+                v.transpose(1, 0, 2),
+                (((2,), (1,)), ((0,), (0,))))               # (Kh, G*T, D)
+            pv = pv.reshape(Kh, G, T, D).transpose(2, 0, 1, 3)
+            acc_ref[...] = (acc_ref[...].reshape(T, Kh, G, D)
+                            * corr[..., None] + pv).reshape(T, Kh * G, D)
+            m_ref[...] = m_new.reshape(T, Kh * G)
+            l_ref[...] = l_new.reshape(T, Kh * G)
+
+    for i in range(depth):
+        _tile(i, *tiles[4 * i:4 * (i + 1)])
+
+    @pl.when(j == nsteps - 1)
+    def _finish():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+        o = jnp.where((l > 0)[..., None], o, 0.0)
+        o_ref[0, ...] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "depth", "interpret"))
+def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
+                       q_seg, q_pos, block_tables, *,
+                       bk: int = 0, depth: int = 1,
+                       interpret: bool = False):
+    """Multi-token paged decode streaming each row's blocks from the pool.
+
+    q: (B, T, H, D); pools: (N, bs, Kh, D); pool_seg/pool_pos: (N, bs)
+    per-slot validity (-1 = not attendable) and absolute position;
+    q_seg/q_pos: (B, T) per-query segment (-1 = bucket padding, output
+    ignored) and position; block_tables: (B, NB) physical block per
+    logical block, -1 = unallocated (prefix-allocated per row).  Returns
+    (B, T, H, D).  ``bk``/``depth`` as in ``fused_paged_verify``.
+    """
+    B, T, H, D = q.shape
+    N, bs, Kh, _ = k_pool.shape
+    NB = block_tables.shape[1]
+    if bk <= 0 or bs % bk:
+        bk = bs
+    depth = max(1, int(depth))
+    f = bs // bk
+    scale = 1.0 / np.sqrt(D)
+
+    kp = k_pool.reshape(N * f, bk, Kh, D)
+    vp = v_pool.reshape(N * f, bk, Kh, D)
+    seg_p = pool_seg.astype(jnp.int32).reshape(N * f, bk)
+    pos_p = pool_pos.astype(jnp.int32).reshape(N * f, bk)
+
+    bt = block_tables.astype(jnp.int32)
+    bt_sub = (jnp.maximum(bt, 0)[:, :, None] * f
+              + jnp.arange(f)).reshape(B, NB * f)
+    # rows allocate blocks as a prefix, so the live sub-block count is
+    # exact; rows with no blocks (idle pool rows) have nlive = 0 and every
+    # tile skipped -> zero output, matching the XLA gather's full mask
+    nlive = (jnp.sum(bt >= 0, axis=1) * f).astype(jnp.int32)
+
+    nsteps = -(-(NB * f) // depth)
+    pad_t = nsteps * depth - NB * f
+    bt_sub = jnp.pad(bt_sub, ((0, 0), (0, pad_t)))
+
+    def clamp(b, j, i, nl):
+        return jnp.minimum(j * depth + i, jnp.maximum(nl[b], 1) - 1)
+
+    def kv_map(i):
+        return lambda b, j, bt_s, nl: \
+            (bt_s[b, clamp(b, j, i, nl)], 0, 0, 0)
+
+    def slot_map(i):
+        return lambda b, j, bt_s, nl: (bt_s[b, clamp(b, j, i, nl)], 0)
+
+    tile_specs = []
+    tile_args = []
+    for i in range(depth):
+        tile_specs += [pl.BlockSpec((1, bk), slot_map(i)),
+                       pl.BlockSpec((1, bk), slot_map(i)),
+                       pl.BlockSpec((1, bk, Kh, D), kv_map(i)),
+                       pl.BlockSpec((1, bk, Kh, D), kv_map(i))]
+        tile_args += [pos_p, seg_p, kp, vp]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nsteps),
+        in_specs=[
+            pl.BlockSpec((1, T), lambda b, j, bt_s, nl: (b, 0)),
+            pl.BlockSpec((1, T), lambda b, j, bt_s, nl: (b, 0)),
+            pl.BlockSpec((1, T, H, D), lambda b, j, bt_s, nl: (b, 0, 0, 0)),
+        ] + tile_specs,
+        out_specs=pl.BlockSpec((1, T, H, D),
+                               lambda b, j, bt_s, nl: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T, H), jnp.float32),
+            pltpu.VMEM((T, H), jnp.float32),
+            pltpu.VMEM((T, H, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_decode_kernel, nsteps=nsteps, depth=depth,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, H, D), q.dtype),
+        interpret=interpret,
+    )(bt_sub, nlive, q_seg.astype(jnp.int32), q_pos.astype(jnp.int32),
+      q, *tile_args)

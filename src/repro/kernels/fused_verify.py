@@ -1,0 +1,248 @@
+"""Fused paged verification kernel — one launch for the whole packed pass.
+
+The serving engine's XLA path verifies a cohort in two HBM round-trips per
+attention layer: an ``(M * bs,)`` gather materializes the live blocks as a
+flat packed copy, then ``layers.attention`` reads that copy back.  This
+kernel fuses the two: KV blocks stream **directly from the pool** through
+the SMEM-prefetched block-id list (``PrefetchScalarGridSpec``), the
+segment/position and tree ancestor-bitmask mask terms apply inline on each
+tile, and an online softmax accumulates across tiles — the gathered copy
+is never written, and per-layer launches drop from two to one.
+
+On top of ``kernels/paged_attention.paged_verify_attention`` this kernel
+adds the autotunable knobs searched by ``kernels/autotune.py``:
+
+``bq``     query tile (rows of the packed query axis per grid step);
+``bk``     KV sub-tile — the pool is viewed as ``(N * f, bk, Kh, D)`` with
+           ``f = bs // bk`` (a reshape, not a copy), so one physical block
+           becomes ``f`` independently schedulable tiles;
+``depth``  KV tiles fetched per grid step: the BlockSpec machinery issues
+           the ``depth`` DMAs of step ``j+1`` while step ``j`` computes,
+           i.e. block-table prefetch is double-buffered ``depth`` tiles
+           ahead of the attention math.
+
+Trailing grid steps (the power-of-two padding of ``block_ids``) clamp
+their index map to the last *live* sub-block, so the revisit elides the
+DMA (same trick as ``paged_decode_attention``) and ``pl.when`` skips the
+compute — padding never costs a block read.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _fused_verify_kernel(ids_ref, owner_ref, nlive_ref,
+                         q_seg_ref, q_pos_ref, q_anc_ref, q_ref, *refs,
+                         nsteps: int, depth: int, scale: float):
+    tiles = refs[:5 * depth]
+    o_ref, m_ref, l_ref, acc_ref = refs[5 * depth:]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_seg = q_seg_ref[...]                  # (BQ,)
+    q_pos = q_pos_ref[...]
+    q_anc = q_anc_ref[...]                  # (BQ,) ancestor bitmask
+    q_lo, q_hi = jnp.min(q_seg), jnp.max(q_seg)
+    q_pmax = jnp.max(q_pos)
+
+    def _tile(i, pos_ref, seg_ref, node_ref, k_ref, v_ref):
+        t = j * depth + i
+        owner = owner_ref[t]                # segment owning sub-block t
+        kv_pos = pos_ref[0]                 # (bk,)
+        kv_node = node_ref[0]               # (bk,) tree-node tag
+        # a pool slot is attendable iff its block is live (owner >= 0) and
+        # the slot itself holds committed/accepted KV (pool seg >= 0)
+        kv_seg = jnp.where(seg_ref[0] >= 0, owner, -1)
+        not_future = jnp.min(jnp.where(kv_seg >= 0, kv_pos,
+                                       jnp.iinfo(jnp.int32).max)) <= q_pmax
+
+        @pl.when((t < nlive_ref[0]) & (owner >= q_lo) & (owner <= q_hi)
+                 & (owner >= 0) & not_future)
+        def _compute():
+            q = q_ref[...].astype(jnp.float32) * scale      # (BQ, H, D)
+            k = k_ref[0].astype(jnp.float32)                # (bk, Kh, D)
+            v = v_ref[0].astype(jnp.float32)
+            BQ, H, D = q.shape
+            bk, Kh, _ = k.shape
+            G = H // Kh
+            qg = q.reshape(BQ, Kh, G, D)
+            s = jax.lax.dot_general(
+                qg.transpose(1, 2, 0, 3).reshape(Kh, G * BQ, D),
+                k.transpose(1, 2, 0),
+                (((2,), (1,)), ((0,), (0,))))               # (Kh, G*BQ, bk)
+            s = s.reshape(Kh, G, BQ, bk).transpose(2, 0, 1, 3)
+            mask = (q_seg[:, None] == kv_seg[None, :]) \
+                & (kv_seg[None, :] >= 0) \
+                & (kv_pos[None, :] <= q_pos[:, None])       # (BQ, bk)
+            # tree-topology term (see kernels/verify_attention.py): -1 =
+            # committed (always attendable), -2 = dead CoW duplicate
+            # (never), n >= 0 = attendable iff bit n of the ancestor mask
+            nd = kv_node[None, :]
+            on_path = ((q_anc[:, None] >> jnp.clip(nd, 0, 31)) & 1) \
+                .astype(bool)
+            mask &= jnp.where(nd == -1, True,
+                              jnp.where(nd < -1, False, on_path))
+            s = jnp.where(mask[:, None, None, :], s, NEG)
+
+            m_prev = m_ref[...].reshape(BQ, Kh, G)
+            l_prev = l_ref[...].reshape(BQ, Kh, G)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            m_safe = jnp.maximum(m_new, -1e29)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[:, None, None, :], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m_prev),
+                             jnp.exp(m_prev - m_safe), 0.0)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jax.lax.dot_general(
+                p.transpose(1, 2, 0, 3).reshape(Kh, G * BQ, bk),
+                v.transpose(1, 0, 2),
+                (((2,), (1,)), ((0,), (0,))))               # (Kh, G*BQ, D)
+            pv = pv.reshape(Kh, G, BQ, D).transpose(2, 0, 1, 3)
+            acc_ref[...] = (acc_ref[...].reshape(BQ, Kh, G, D)
+                            * corr[..., None] + pv).reshape(BQ, Kh * G, D)
+            m_ref[...] = m_new.reshape(BQ, Kh * G)
+            l_ref[...] = l_new.reshape(BQ, Kh * G)
+
+    for i in range(depth):
+        _tile(i, *tiles[5 * i:5 * (i + 1)])
+
+    @pl.when(j == nsteps - 1)
+    def _finish():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.maximum(l, 1e-30)[..., None]
+        o = jnp.where((l > 0)[..., None], o, 0.0)
+        o_ref[...] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "depth", "interpret"))
+def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
+                       q_seg, q_pos, block_ids, block_owner,
+                       q_anc=None, block_node=None, *,
+                       bq: int = 128, bk: int = 0, depth: int = 1,
+                       interpret: bool = False):
+    """Single-launch packed verification streaming KV from the pool.
+
+    Same contract as ``paged_attention.paged_verify_attention`` — q:
+    (Tq, H, D); pools: (N, bs, Kh, D); pool_seg/pool_pos: (N, bs);
+    q_seg/q_pos: (Tq,); block_ids/block_owner: (M,) live physical blocks
+    and their owning segments (-1 owner = padding entry); optional
+    q_anc (Tq,) / block_node (M, bs) tree topology.  Returns (Tq, H, D).
+
+    ``bq``/``bk``/``depth`` are the autotuned tile knobs (module
+    docstring); ``bk`` in (0, non-divisor of bs) falls back to ``bs``.
+    """
+    Tq, H, D = q.shape
+    N, bs, Kh, _ = k_pool.shape
+    M = block_ids.shape[0]
+    if bk <= 0 or bs % bk:
+        bk = bs
+    depth = max(1, int(depth))
+    f = bs // bk
+    scale = 1.0 / np.sqrt(D)
+
+    if q_anc is None:
+        q_anc = jnp.full((Tq,), -1, jnp.int32)
+    if block_node is None:
+        block_node = jnp.full((M, bs), -1, jnp.int32)
+
+    # sub-tile view of the pool — a reshape of contiguous memory, no copy
+    kp = k_pool.reshape(N * f, bk, Kh, D)
+    vp = v_pool.reshape(N * f, bk, Kh, D)
+    seg_p = pool_seg.astype(jnp.int32).reshape(N * f, bk)
+    pos_p = pool_pos.astype(jnp.int32).reshape(N * f, bk)
+    node_p = block_node.astype(jnp.int32).reshape(M * f, bk)
+
+    ids = jnp.maximum(block_ids.astype(jnp.int32), 0)
+    owner = block_owner.astype(jnp.int32)
+    ids_sub = (ids[:, None] * f + jnp.arange(f)).reshape(M * f)
+    owner_sub = jnp.repeat(owner, f)
+    # live sub-blocks end at the last owner >= 0 entry (owner gaps inside
+    # the live prefix, if any, stay untouched — only *trailing* padding
+    # folds into revisits)
+    last_live = jnp.max(jnp.where(owner >= 0,
+                                  jnp.arange(M, dtype=jnp.int32), -1))
+    nlive = ((last_live + 1) * f).reshape(1)
+
+    nsteps = -(-(M * f) // depth)
+    pad_t = nsteps * depth - M * f
+    ids_sub = jnp.pad(ids_sub, (0, pad_t))
+    owner_sub = jnp.pad(owner_sub, (0, pad_t), constant_values=-1)
+
+    Tq_p = int(np.ceil(Tq / bq) * bq)
+    qp = jnp.pad(q, ((0, Tq_p - Tq), (0, 0), (0, 0)))
+
+    def pad_i32(x, n):
+        return jnp.pad(x.astype(jnp.int32), (0, n), constant_values=-1)
+    q_seg_p = pad_i32(q_seg, Tq_p - Tq)
+    q_pos_p = pad_i32(q_pos, Tq_p - Tq)
+    q_anc_p = pad_i32(q_anc, Tq_p - Tq)
+
+    def clamp(j, i, nl):
+        # trailing steps revisit the last live sub-block: DMA elided,
+        # compute skipped in-kernel via t < nlive
+        return jnp.minimum(j * depth + i, jnp.maximum(nl[0], 1) - 1)
+
+    def kv_map(i):
+        return lambda qi, j, ids_s, ow, nl: (ids_s[clamp(j, i, nl)], 0, 0, 0)
+
+    def slot_map(i):
+        return lambda qi, j, ids_s, ow, nl: (ids_s[clamp(j, i, nl)], 0)
+
+    def node_map(i):
+        # block_node is in *gathered* order, aligned with block_ids
+        return lambda qi, j, ids_s, ow, nl: (clamp(j, i, nl), 0)
+
+    def q_map(qi, j, ids_s, ow, nl):
+        return (qi,)
+
+    tile_specs = []
+    tile_args = []
+    for i in range(depth):
+        tile_specs += [pl.BlockSpec((1, bk), slot_map(i)),
+                       pl.BlockSpec((1, bk), slot_map(i)),
+                       pl.BlockSpec((1, bk), node_map(i)),
+                       pl.BlockSpec((1, bk, Kh, D), kv_map(i)),
+                       pl.BlockSpec((1, bk, Kh, D), kv_map(i))]
+        tile_args += [pos_p, seg_p, node_p, kp, vp]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(Tq_p // bq, nsteps),
+        in_specs=[
+            pl.BlockSpec((bq,), q_map),
+            pl.BlockSpec((bq,), q_map),
+            pl.BlockSpec((bq,), q_map),
+            pl.BlockSpec((bq, H, D), lambda qi, j, ids_s, ow, nl:
+                         (qi, 0, 0)),
+        ] + tile_specs,
+        out_specs=pl.BlockSpec((bq, H, D), lambda qi, j, ids_s, ow, nl:
+                               (qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, H), jnp.float32),
+            pltpu.VMEM((bq, H), jnp.float32),
+            pltpu.VMEM((bq, H, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_verify_kernel, nsteps=nsteps, depth=depth,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tq_p, H, D), q.dtype),
+        interpret=interpret,
+    )(ids_sub, owner_sub, nlive, q_seg_p, q_pos_p, q_anc_p, qp, *tile_args)
+    return out[:Tq]

@@ -8,8 +8,11 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_decode import fused_paged_decode as _fused_decode
+from repro.kernels.fused_verify import fused_paged_verify as _fused_verify
 from repro.kernels.paged_attention import (
     paged_decode_attention as _paged_decode,
     paged_verify_attention as _paged_verify)
@@ -57,3 +60,47 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
     return _paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
                          q_seg, q_pos, block_ids, block_owner,
                          bq=bq, interpret=interpret)
+
+
+# ------------------------------------------------- fused (autotuned) path --
+
+def _resolve_config(kind, q, k_pool, gamma_max, shape, config):
+    """Dispatch-time autotune-cache lookup: explicit config wins, else the
+    cached winner for this (arch, gamma_max, block_size, shape) key, else
+    the safe default (autotune.DEFAULT_CONFIG — never implicit tuning)."""
+    if config is not None:
+        return config
+    return autotune.get_config(
+        kind, H=q.shape[-2], Kh=k_pool.shape[2], D=q.shape[-1],
+        gamma_max=gamma_max, block_size=k_pool.shape[1], shape=shape)
+
+
+def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
+                       q_seg, q_pos, block_ids, block_owner,
+                       q_anc=None, block_node=None, *,
+                       config=None, gamma_max: int = 0, interpret=None):
+    """Single-launch packed verification (kernels/fused_verify.py): KV
+    streams straight from the pool, no gathered copy.  ``config`` (a
+    ``autotune.FusedConfig``) pins the tile shapes; None consults the
+    autotune cache with the default fallback."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    shape = "tree" if block_node is not None else "linear"
+    cfg = _resolve_config("verify", q, k_pool, gamma_max, shape, config)
+    return _fused_verify(q, k_pool, v_pool, pool_seg, pool_pos,
+                         q_seg, q_pos, block_ids, block_owner,
+                         q_anc, block_node, bq=cfg.bq, bk=cfg.bk,
+                         depth=cfg.depth, interpret=interpret)
+
+
+def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
+                       q_seg, q_pos, block_tables, *,
+                       config=None, gamma_max: int = 0, interpret=None):
+    """Single-launch multi-token paged decode (kernels/fused_decode.py)
+    with block-table prefetch double-buffered against tile compute."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    cfg = _resolve_config("decode", q, k_pool, gamma_max, "linear", config)
+    return _fused_decode(q, k_pool, v_pool, pool_seg, pool_pos,
+                         q_seg, q_pos, block_tables, bk=cfg.bk,
+                         depth=cfg.depth, interpret=interpret)

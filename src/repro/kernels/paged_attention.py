@@ -149,9 +149,10 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
 
 # ----------------------------------------------------------------- verify --
 
-def _verify_kernel(ids_ref, owner_ref, q_seg_ref, q_pos_ref, q_anc_ref,
-                   pos_ref, seg_ref, node_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, nb: int, scale: float):
+def _verify_kernel(ids_ref, owner_ref, nlive_ref, q_seg_ref, q_pos_ref,
+                   q_anc_ref, pos_ref, seg_ref, node_ref, q_ref, k_ref,
+                   v_ref, o_ref, m_ref, l_ref, acc_ref, *, nb: int,
+                   scale: float):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -263,28 +264,41 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
     q_anc_p = pad_i32(q_anc, Tq_p - Tq)
     ids = jnp.maximum(block_ids.astype(jnp.int32), 0)
     owner = block_owner.astype(jnp.int32)
+    # trailing grid steps (power-of-two padding of block_ids) clamp to the
+    # last live fragment the way paged_decode_attention clamps to the last
+    # live block: the revisit elides the DMA instead of re-reading padding
+    # blocks, and the kernel's owner < 0 guard already skips their compute.
+    # Interior owner gaps (none today) are deliberately left unclamped.
+    last_live = jnp.max(jnp.where(owner >= 0,
+                                  jnp.arange(M, dtype=jnp.int32), -1))
+    nlive = jnp.maximum(last_live + 1, 1).reshape(1)
 
-    def blk(i, j, ids, ow):
-        return (ids[j], 0)
+    def _jc(j, nl):
+        return jnp.minimum(j, nl[0] - 1)
+
+    def blk(i, j, ids, ow, nl):
+        return (ids[_jc(j, nl)], 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(Tq_p // bq, M),
         in_specs=[
-            pl.BlockSpec((bq,), lambda i, j, ids, ow: (i,)),
-            pl.BlockSpec((bq,), lambda i, j, ids, ow: (i,)),
-            pl.BlockSpec((bq,), lambda i, j, ids, ow: (i,)),
+            pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
+            pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
+            pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
             pl.BlockSpec((1, bs), blk),
             pl.BlockSpec((1, bs), blk),
             # block_node is in *gathered* order, aligned with block_ids
-            pl.BlockSpec((1, bs), lambda i, j, ids, ow: (j, 0)),
-            pl.BlockSpec((bq, H, D), lambda i, j, ids, ow: (i, 0, 0)),
-            pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow:
-                         (ids[j], 0, 0, 0)),
-            pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow:
-                         (ids[j], 0, 0, 0)),
+            pl.BlockSpec((1, bs), lambda i, j, ids, ow, nl:
+                         (_jc(j, nl), 0)),
+            pl.BlockSpec((bq, H, D), lambda i, j, ids, ow, nl: (i, 0, 0)),
+            pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow, nl:
+                         (ids[_jc(j, nl)], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow, nl:
+                         (ids[_jc(j, nl)], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((bq, H, D), lambda i, j, ids, ow: (i, 0, 0)),
+        out_specs=pl.BlockSpec((bq, H, D),
+                               lambda i, j, ids, ow, nl: (i, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((bq, H), jnp.float32),
             pltpu.VMEM((bq, H), jnp.float32),
@@ -296,7 +310,7 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Tq_p, H, D), q.dtype),
         interpret=interpret,
-    )(ids, owner, q_seg_p, q_pos_p, q_anc_p, pool_pos.astype(jnp.int32),
-      pool_seg.astype(jnp.int32), block_node.astype(jnp.int32),
-      qp, k_pool, v_pool)
+    )(ids, owner, nlive, q_seg_p, q_pos_p, q_anc_p,
+      pool_pos.astype(jnp.int32), pool_seg.astype(jnp.int32),
+      block_node.astype(jnp.int32), qp, k_pool, v_pool)
     return out[:Tq]

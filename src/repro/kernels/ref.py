@@ -113,6 +113,40 @@ def paged_verify_ref(q, k_pool, v_pool, pool_seg, pool_pos,
                                 q_anc, kv_node)
 
 
+def paged_seq_decode_ref(q, k_pool, v_pool, pool_seg, pool_pos,
+                         q_seg, q_pos, block_tables):
+    """Oracle for ``kernels/fused_decode.fused_paged_decode``: gather each
+    row's block list dense, then segment/position-masked attention.
+
+    q: (B, T, H, D); pools: (N, bs, Kh, D); pool_seg/pool_pos: (N, bs);
+    q_seg/q_pos: (B, T) (seg -1 = padding query -> zero output);
+    block_tables: (B, NB), -1 = unallocated (slots masked)."""
+    B, T, H, Dh = q.shape
+    bs, Kh = k_pool.shape[1], k_pool.shape[2]
+    G = H // Kh
+    g = jnp.maximum(block_tables, 0)
+    k = k_pool[g].reshape(B, -1, Kh, Dh).astype(jnp.float32)
+    v = v_pool[g].reshape(B, -1, Kh, Dh).astype(jnp.float32)
+    seg = pool_seg[g].reshape(B, -1)
+    kv_pos = pool_pos[g].reshape(B, -1)
+    live = jnp.repeat(block_tables >= 0, bs, axis=1)
+    kv_seg = jnp.where(live & (seg >= 0), seg, -1)
+    qf = q.astype(jnp.float32).reshape(B, T, Kh, G, Dh)
+    s = jnp.einsum("btkgd,bskd->btkgs", qf, k) / np.sqrt(Dh)
+    mask = (q_seg[:, :, None] == kv_seg[:, None, :]) \
+        & (kv_seg[:, None, :] >= 0) \
+        & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    s = jnp.where(mask[:, :, None, None, :], s, NEG)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("btkgs,bskd->btkgd", p / jnp.maximum(denom, 1e-30), v)
+    any_valid = jnp.any(mask, axis=-1)
+    o = jnp.where(any_valid[:, :, None, None, None], o, 0.0)
+    return o.reshape(B, T, H, Dh).astype(q.dtype)
+
+
 def decode_ref(q, k, v, lengths):
     """GQA decode: one query token per row against a long KV cache.
     q: (B, H, D); k, v: (B, S, Kh, D); lengths: (B,) valid KV prefix."""

@@ -31,6 +31,7 @@ import json
 import jax
 
 from repro.configs import spin_llama
+from repro.core import decompose as D
 from repro.core import spec_decode as sd
 from repro.core.selector import (LBSS, EpsilonGreedy, GreedyPromptLength,
                                  SelectorConfig)
@@ -150,7 +151,19 @@ def build_parser() -> argparse.ArgumentParser:
                     help="tree-speculation branching factor (only with "
                          "--spec-shape tree); 1 is bit-identical to "
                          "linear; gamma_max + branches must fit the "
-                         "32-node ancestor mask")
+                         "ancestor-mask node budget "
+                         f"({D.max_tree_nodes()} nodes)")
+    ap.add_argument("--fused-kernels", default="off",
+                    choices=["on", "off"],
+                    help="route the paged decode/verify hot path through "
+                         "the fused single-launch Pallas kernels "
+                         "(kernels/fused_decode.py, fused_verify.py), "
+                         "tile shapes resolved from the autotune cache "
+                         "(results/TUNE_cache.json, safe default on a "
+                         "cold miss); off keeps the gather + "
+                         "paged-attention path bit-identically (needs "
+                         "--kv-layout paged; falls back with a warning "
+                         "otherwise)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="independent engine replicas behind the router "
                          "(serving/router.py); --capacity and --kv-budget "
@@ -192,10 +205,13 @@ def main(argv=None):
         gmax = (args.gamma if args.gamma_policy == "fixed"
                 else (args.gamma_max if args.gamma_max is not None
                       else 2 * args.gamma))
-        if gmax + min(args.spec_branch, gmax) > 32:
-            ap.error(f"--spec-shape tree needs gamma_max + branches <= 32 "
-                     f"tree nodes (got gamma_max={gmax}, "
-                     f"spec_branch={args.spec_branch})")
+        max_nodes = D.max_tree_nodes()
+        if gmax + min(args.spec_branch, gmax) > max_nodes:
+            ap.error(f"--spec-shape tree needs gamma_max + branches <= "
+                     f"{max_nodes} tree nodes for the "
+                     f"{D.ANCESTOR_MASK_BITS}-bit ancestor mask (got "
+                     f"--gamma-max {gmax}, --spec-branch "
+                     f"{args.spec_branch}); lower one of them")
 
     llm, ssms = build_zoo(args.vocab, args.seed, args.n_ssms)
     reqs = make_workload(args.dataset, args.requests, args.vocab,
@@ -230,6 +246,7 @@ def main(argv=None):
                             token_budget=args.token_budget,
                             spec_shape=args.spec_shape,
                             spec_branch=args.spec_branch,
+                            fused_kernels=args.fused_kernels,
                             seed=seed)
         return SpinEngine(llm, ssms, sel, ecfg)
 

@@ -64,6 +64,7 @@ from repro.core import spec_decode as sd
 from repro.core.gamma import GammaConfig, GammaController
 from repro.core.switching import SwitchManager
 from repro.data.workloads import Request
+from repro.kernels import autotune
 from repro.models import transformer as T
 from repro.serving.paged import paged_compatible
 from repro.serving.pool import DenseCachePool, PagedCachePool
@@ -128,6 +129,14 @@ class EngineConfig:
     # auto-fallback).  spec_branch=1 is bit-identical to linear.
     spec_shape: str = "linear"
     spec_branch: int = 2
+    # fused speculative-step Pallas kernels (kernels/fused_decode.py /
+    # fused_verify.py): "on" streams KV straight from the paged pool in a
+    # single launch per attention site, with tile shapes resolved once at
+    # engine construction from the autotune cache
+    # (results/TUNE_cache.json, safe default on a cold miss); "off" keeps
+    # the PR-6 gather + paged-kernel path bit-identically.  Requires the
+    # paged layout; "on" under a dense fallback warns and stays unfused.
+    fused_kernels: str = "off"
 
 
 class SpinEngine:
@@ -144,6 +153,9 @@ class SpinEngine:
             raise ValueError(f"unknown spec_shape {ecfg.spec_shape!r}")
         if ecfg.spec_branch < 1:
             raise ValueError("spec_branch must be >= 1")
+        if ecfg.fused_kernels not in ("on", "off"):
+            raise ValueError(
+                f"unknown fused_kernels {ecfg.fused_kernels!r}")
         if ecfg.gamma_policy == "fixed":
             self.gamma_max = ecfg.gamma
         else:
@@ -164,12 +176,41 @@ class SpinEngine:
                 "verification; falling back to linear speculation",
                 stacklevel=2)
         self.branches = ecfg.spec_branch if self.tree else 1
+        max_nodes = D.max_tree_nodes()
         if self.tree and self.gamma_max + min(ecfg.spec_branch,
-                                              self.gamma_max) > 32:
+                                              self.gamma_max) > max_nodes:
             raise ValueError(
-                f"tree speculation needs gamma_max + branches <= 32 tree "
-                f"nodes for the 32-bit ancestor mask (gamma_max="
-                f"{self.gamma_max}, spec_branch={ecfg.spec_branch})")
+                f"tree speculation needs gamma_max + branches <= "
+                f"{max_nodes} tree nodes for the "
+                f"{D.ANCESTOR_MASK_BITS}-bit ancestor mask (got gamma_max="
+                f"{self.gamma_max} + min(spec_branch={ecfg.spec_branch}, "
+                f"gamma_max) = "
+                f"{self.gamma_max + min(ecfg.spec_branch, self.gamma_max)}"
+                f"); lower --gamma-max or --spec-branch")
+        # fused Pallas kernels stream KV straight out of the paged block
+        # pool, so they require the paged layout; resolve each bundle's
+        # tile config ONCE here (autotune-cache lookup with the safe
+        # default on a cold miss) so dispatch never tunes implicitly and
+        # every jit trace sees a stable static config
+        self.fused = ecfg.fused_kernels == "on" and self.paged
+        if ecfg.fused_kernels == "on" and not self.paged:
+            warnings.warn(
+                "fused_kernels='on' requires the paged KV layout; "
+                "falling back to the unfused attention path",
+                stacklevel=2)
+        shape = "tree" if self.tree else "linear"
+
+        def _fused_cfg(kind, b, s="linear"):
+            if not self.fused:
+                return None
+            return autotune.get_config(
+                kind, H=b.cfg.n_heads, Kh=b.cfg.n_kv_heads, D=b.cfg.hd,
+                gamma_max=self.gamma_max, block_size=ecfg.block_size,
+                shape=s)
+
+        self.fused_llm_decode = _fused_cfg("decode", llm)
+        self.fused_llm_verify = _fused_cfg("verify", llm, shape)
+        self.fused_ssm_decode = [_fused_cfg("decode", b) for b in self.ssms]
         # each extra branch needs a pool row to draft/verify through;
         # scheduler capacity (concurrent requests) stays ecfg.capacity
         row_mult = self.branches
@@ -412,7 +453,7 @@ class SpinEngine:
             bt = self.llm_pool.row_table(rid)
             logits, cache = self.llm.append_paged(
                 self.llm_pool.cache, jnp.asarray(toks), lengths,
-                jnp.asarray(segs), bt)
+                jnp.asarray(segs), bt, self.fused_llm_decode)
             self.llm_pool.cache = cache
         else:
             one = self.llm_pool.row_cache(rid)
@@ -738,7 +779,8 @@ class SpinEngine:
                 for rid, row in pool.row_of.items()})
             bt, _ = pool.block_table_array()
             cand, _, cache = sd.draft(b, pool.cache, tok, lengths,
-                                      width, k, block_tables=bt)
+                                      width, k, block_tables=bt,
+                                      fused_cfg=self.fused_ssm_decode[j])
             pool.cache = cache
             return np.asarray(cand)
         cand, _, cache = sd.draft(b, pool.cache, tok, lengths,
@@ -813,7 +855,8 @@ class SpinEngine:
         self.rng, _ = jax.random.split(self.rng)
         bt, _ = pool.block_table_array()
         cand, cache = sd.draft_tree(b, pool.cache, tok, lengths, width,
-                                    ranks, block_tables=bt)
+                                    ranks, block_tables=bt,
+                                    fused_cfg=self.fused_ssm_decode[j])
         pool.cache = cache
         for brid in forked:
             pool.evict(brid)
@@ -930,7 +973,8 @@ class SpinEngine:
             if self.paged:
                 bt, _ = self.llm_pool.block_table_array()
                 logits, cache = self.llm.decode_paged(
-                    self.llm_pool.cache, inp, lengths, bt)
+                    self.llm_pool.cache, inp, lengths, bt,
+                    self.fused_llm_decode)
             else:
                 logits, cache = self.llm.decode(self.llm_pool.cache, inp,
                                                 lengths)
@@ -1026,7 +1070,8 @@ class SpinEngine:
             if self.paged:
                 bt, _ = pool.block_table_array()
                 _, pool.cache = self.ssms[j].decode_paged(
-                    pool.cache, jnp.asarray(outs_j), pl + 1, bt)
+                    pool.cache, jnp.asarray(outs_j), pl + 1, bt,
+                    self.fused_ssm_decode[j])
                 pool.invalidate_span(
                     pl + 2 + jnp.asarray(nacc_j, jnp.int32),
                     pl + W + 3, W=W + 1)
@@ -1079,14 +1124,16 @@ class SpinEngine:
                     jnp.asarray(q_pos.astype(np.int32)),
                     jnp.asarray(q_seg), jnp.asarray(q_rows), bt,
                     jnp.asarray(ids_np), jnp.asarray(owner_np),
-                    jnp.asarray(q_anc), jnp.asarray(block_node))
+                    jnp.asarray(q_anc), jnp.asarray(block_node),
+                    self.fused_llm_verify)
             else:
                 q_rows, q_pos, q_seg = D.build_query_layout(lens_np, W)
                 logits, cache = self.llm.verify_paged(
                     self.llm_pool.cache, inp.reshape(1, -1),
                     jnp.asarray(q_pos.astype(np.int32)),
                     jnp.asarray(q_seg), jnp.asarray(q_rows), bt,
-                    jnp.asarray(ids_np), jnp.asarray(owner_np))
+                    jnp.asarray(ids_np), jnp.asarray(owner_np),
+                    self.fused_llm_verify)
             self.llm_pool.cache = cache
             return logits[0].reshape(N, W + 1, -1)
         lens_np = np.maximum(np.asarray(lengths), 1)
@@ -1208,6 +1255,7 @@ class SpinEngine:
             "prefill_chunk": (self.ecfg.prefill_chunk if self.chunked
                               else 0),
             "spec_shape": "tree" if self.tree else "linear",
+            "fused_kernels": "on" if self.fused else "off",
             "spec_branches": self.branches,
             "verify_tokens": self.verify_tokens_total,
             "tree_forks": self.tree_forks,

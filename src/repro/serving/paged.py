@@ -133,6 +133,30 @@ def make_paged_decode_override(block_tables, num_blocks: int, bs: int):
     return override
 
 
+def make_fused_decode_override(block_tables, num_blocks: int, bs: int,
+                               fused_cfg):
+    """Fused-kernel variant of :func:`make_paged_decode_override`: the
+    write scatter is unchanged (O(new tokens)), but the read side is ONE
+    ``kernels/fused_decode.fused_paged_decode`` launch streaming the
+    row's blocks straight from the pool — the ``(B, nb_max * bs)``
+    gathered view is never materialized.  ``fused_cfg`` is the
+    ``kernels/autotune.FusedConfig`` pinning the tile shapes (resolved by
+    the engine at construction; static under jit)."""
+    from repro.kernels import ops
+    bt = block_tables.astype(jnp.int32)
+
+    def override(q, k_new, v_new, positions, segments, kv_cache, cfg, opts):
+        widx = _flat_write_idx(bt, positions, bs, num_blocks * bs)
+        new_cache = _write_kv(kv_cache, widx.reshape(-1), k_new, v_new,
+                              positions, segments, num_blocks, bs)
+        o = ops.fused_paged_decode(
+            q, new_cache["k"], new_cache["v"], new_cache["seg"],
+            new_cache["pos"], segments, positions, bt, config=fused_cfg)
+        return o.astype(q.dtype), new_cache
+
+    return override
+
+
 def make_paged_verify_override(q_rows, block_tables, block_ids, block_owner,
                                num_blocks: int, bs: int,
                                q_anc=None, block_node=None):
@@ -188,10 +212,46 @@ def make_paged_verify_override(q_rows, block_tables, block_ids, block_owner,
     return override
 
 
+def make_fused_verify_override(q_rows, block_tables, block_ids, block_owner,
+                               num_blocks: int, bs: int,
+                               q_anc=None, block_node=None, fused_cfg=None):
+    """Fused-kernel variant of :func:`make_paged_verify_override`: one
+    ``kernels/fused_verify.fused_paged_verify`` launch replaces the
+    ``(M * bs,)`` fragment gather + packed attention pair, for linear and
+    tree shapes alike (``q_anc``/``block_node`` thread straight into the
+    kernel's inline mask)."""
+    from repro.kernels import ops
+    q_rows = jnp.asarray(q_rows, jnp.int32)
+    bt = block_tables.astype(jnp.int32)
+    ids = jnp.asarray(block_ids, jnp.int32)
+    owner = jnp.asarray(block_owner, jnp.int32)
+    anc = None if q_anc is None else jnp.asarray(q_anc, jnp.int32)
+    node = None if block_node is None else jnp.asarray(block_node, jnp.int32)
+
+    def override(q, k_new, v_new, positions, segments, kv_cache, cfg, opts):
+        pos = positions[0]
+        nb = bt.shape[1]
+        lb = pos // bs
+        phys = bt[q_rows, jnp.clip(lb, 0, nb - 1)]        # (Tq,)
+        ok = (pos >= 0) & (lb < nb) & (phys >= 0)
+        widx = jnp.where(ok, phys * bs + pos % bs, num_blocks * bs)
+        new_cache = _write_kv(kv_cache, widx.reshape(-1), k_new, v_new,
+                              positions, jnp.zeros_like(segments),
+                              num_blocks, bs)
+        o = ops.fused_paged_verify(
+            q[0], new_cache["k"], new_cache["v"], new_cache["seg"],
+            new_cache["pos"], segments[0], pos, ids, owner, anc, node,
+            config=fused_cfg)
+        return o[None].astype(q.dtype), new_cache
+
+    return override
+
+
 # ------------------------------------------------------- model entrypoints --
 
 def decode_step_paged(params, cfg, cache, *, tokens, lengths, block_tables,
-                      segments=None, opts: T.Opts = T.Opts()):
+                      segments=None, fused_cfg=None,
+                      opts: T.Opts = T.Opts()):
     """Paged analogue of ``transformer.decode_step``: T new tokens per row,
     K/V written to / read from the rows' block tables.
 
@@ -204,23 +264,38 @@ def decode_step_paged(params, cfg, cache, *, tokens, lengths, block_tables,
     shape as packed verification, so the TPU hot path reuses
     ``kernels.paged_attention.paged_verify_attention`` (q_pos = chunk
     positions, owner = the row's blocks) instead of a dedicated
-    chunk-prefill kernel."""
+    chunk-prefill kernel.
+
+    ``fused_cfg`` (a ``kernels/autotune.FusedConfig``, static) routes the
+    read side through the fused Pallas kernel instead of the XLA gather;
+    None keeps the gather formulation (bit-identical legacy path)."""
     num_blocks, bs = pool_dims(cache)
-    override = make_paged_decode_override(block_tables, num_blocks, bs)
+    if fused_cfg is not None:
+        override = make_fused_decode_override(block_tables, num_blocks, bs,
+                                              fused_cfg)
+    else:
+        override = make_paged_decode_override(block_tables, num_blocks, bs)
     return T.decode_step(params, cfg, cache, tokens=tokens, lengths=lengths,
                          segments=segments, opts=opts, attn_override=override)
 
 
 def verify_step_paged(params, cfg, cache, *, tokens, positions, segments,
                       q_rows, block_tables, block_ids, block_owner,
-                      q_anc=None, block_node=None,
+                      q_anc=None, block_node=None, fused_cfg=None,
                       opts: T.Opts = T.Opts()):
     """Paged analogue of ``transformer.verify_step_packed``; optional
-    ``q_anc``/``block_node`` add the token-tree topology mask term."""
+    ``q_anc``/``block_node`` add the token-tree topology mask term.
+    ``fused_cfg`` selects the single-launch fused verify kernel (see
+    :func:`decode_step_paged`)."""
     num_blocks, bs = pool_dims(cache)
-    override = make_paged_verify_override(q_rows, block_tables, block_ids,
-                                          block_owner, num_blocks, bs,
-                                          q_anc=q_anc, block_node=block_node)
+    if fused_cfg is not None:
+        override = make_fused_verify_override(
+            q_rows, block_tables, block_ids, block_owner, num_blocks, bs,
+            q_anc=q_anc, block_node=block_node, fused_cfg=fused_cfg)
+    else:
+        override = make_paged_verify_override(
+            q_rows, block_tables, block_ids, block_owner, num_blocks, bs,
+            q_anc=q_anc, block_node=block_node)
     return T.verify_step_packed(params, cfg, cache, tokens=tokens,
                                 positions=positions, segments=segments,
                                 attn_override=override, opts=opts)
