@@ -179,6 +179,21 @@ def bench_concurrency(emit, llm):
     ratio = n_paged / max(n_dense, 1)
     emit("paged_concurrency[budget=2048cells,ctx=40]", 0.0,
          f"dense={n_dense} paged={n_paged} ratio={ratio:.2f}x")
+
+    # the same cell budget re-priced in BYTES per --kv-dtype: quantized
+    # pools mint more physical blocks from the identical HBM spend, so
+    # the dtype-adjusted effective resident capacity scales with the
+    # bytes-per-block ratio (headline numbers in benchmarks/bench_quant)
+    byte_budget = (budget // BLOCK) * paged.bytes_per_block()
+    for kv_dtype in ("bf16", "int8", "fp8"):
+        probe = PagedCachePool(llm.cfg, 1, MAX_LEN, BLOCK, num_blocks=2,
+                               kv_dtype=kv_dtype)
+        eff_blocks = byte_budget // probe.bytes_per_block()
+        eff_residents = int(eff_blocks) // paged.blocks_needed(PROMPT)
+        emit(f"paged_concurrency_dtype[kv={kv_dtype},ctx=40]", 0.0,
+             f"concurrency={eff_residents} physical_blocks={budget // BLOCK} "
+             f"effective_blocks={eff_blocks} "
+             f"bytes_per_block={probe.bytes_per_block()}")
     return ratio
 
 

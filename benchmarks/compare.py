@@ -28,7 +28,7 @@ from the current run *for a section the current run claims to have run*
 Refreshing the baseline after an intentional perf change::
 
     PYTHONPATH=src python -m benchmarks.run \
-        --sections serving,paged,kernels,chunked,gamma,tree,router \
+        --sections serving,paged,kernels,chunked,gamma,tree,router,quant \
         --json-path results/BENCH_baseline.json
 """
 

@@ -35,9 +35,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_batching, bench_chunked, bench_gamma,
                             bench_heterogeneity, bench_kernels, bench_overall,
-                            bench_paged, bench_pipeline, bench_router,
-                            bench_selector, bench_serving, bench_tree,
-                            bench_verification, roofline)
+                            bench_paged, bench_pipeline, bench_quant,
+                            bench_router, bench_selector, bench_serving,
+                            bench_tree, bench_verification, roofline)
 
     records = []
     section_name = [""]
@@ -62,6 +62,7 @@ def main(argv=None) -> None:
         ("chunked prefill", bench_chunked.main),
         ("gamma depth", bench_gamma.main),
         ("tree speculation", bench_tree.main),
+        ("quant kv", bench_quant.main),
         ("router replicas", bench_router.main),
         ("roofline", roofline.main),
     ]

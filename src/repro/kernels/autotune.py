@@ -7,7 +7,13 @@ attention geometry and the paging granularity, so this module benchmarks
 the small candidate grid on synthetic pool shapes and caches the winner
 per tune key::
 
-    (kind | H x Kh x D | gamma_max | block_size | linear/tree | backend)
+    (kind | H x Kh x D | gamma_max | block_size | linear/tree | kv dtype
+     | backend)
+
+The kv dtype component keeps int8/fp8 winners (half the KV bytes per
+tile, dequant multiply in the inner loop) from colliding with bf16
+entries for the same geometry; keys written before the component existed
+are migrated to ``kvbf16`` on load and malformed keys are dropped.
 
 Winners persist in ``results/TUNE_cache.json``.  ``kernels/ops.py``
 consults :func:`get_config` at dispatch when no explicit config is given;
@@ -22,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import re
 import time
 from typing import Dict, List, Optional
 
@@ -31,6 +38,15 @@ import numpy as np
 
 CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                           "results", "TUNE_cache.json")
+ROOFLINE_PATH = os.path.join(os.path.dirname(CACHE_PATH),
+                             "dryrun_baseline.json")
+
+# current key grammar (see tune_key); legacy = same minus the kv field
+_KEY_FIELDS = (r"(verify|decode)", r"H\d+xKh\d+xD\d+", r"g\d+", r"bs\d+",
+               r"(linear|tree)", r"kv\w+", r"\w+")
+_KEY_RE = re.compile("^" + r"\|".join(_KEY_FIELDS) + "$")
+_LEGACY_RE = re.compile(
+    "^" + r"\|".join(_KEY_FIELDS[:5] + _KEY_FIELDS[6:]) + "$")
 
 # consult/miss counters, reset-able by benchmarks and tests
 CACHE_STATS: Dict[str, int] = {"hits": 0, "misses": 0}
@@ -50,21 +66,45 @@ DEFAULT_CONFIG = FusedConfig()
 
 
 def tune_key(kind: str, *, H: int, Kh: int, D: int, gamma_max: int,
-             block_size: int, shape: str = "linear") -> str:
+             block_size: int, shape: str = "linear",
+             kv_dtype: str = "bf16") -> str:
     """Cache key: kernel kind + model attention geometry + speculation
-    depth cap + paging granularity + linear/tree + backend (tile
-    trade-offs differ between compiled Mosaic and the CPU interpreter)."""
+    depth cap + paging granularity + linear/tree + kv storage dtype +
+    backend (tile trade-offs differ between compiled Mosaic and the CPU
+    interpreter)."""
     return (f"{kind}|H{H}xKh{Kh}xD{D}|g{gamma_max}|bs{block_size}"
-            f"|{shape}|{jax.default_backend()}")
+            f"|{shape}|kv{kv_dtype}|{jax.default_backend()}")
+
+
+def _migrate_key(key: str) -> Optional[str]:
+    """Current keys pass through; pre-kv-dtype keys (written by older
+    tuners, necessarily bf16 pools) gain ``kvbf16``; anything else is
+    corrupt and dropped (returns None)."""
+    if _KEY_RE.match(key):
+        return key
+    if _LEGACY_RE.match(key):
+        head, backend = key.rsplit("|", 1)
+        return f"{head}|kvbf16|{backend}"
+    return None
 
 
 def load_cache(path: Optional[str] = None) -> dict:
     path = path or CACHE_PATH
     try:
         with open(path) as f:
-            return json.load(f)
+            raw = json.load(f)
     except (OSError, json.JSONDecodeError):
         return {}
+    if not isinstance(raw, dict):
+        return {}
+    # current-format keys win over a legacy key migrating to the same slot
+    cache = {k: v for k, v in raw.items()
+             if _KEY_RE.match(k) and isinstance(v, dict)}
+    for key, entry in raw.items():
+        mig = _migrate_key(key)
+        if mig is not None and mig != key and isinstance(entry, dict):
+            cache.setdefault(mig, entry)
+    return cache
 
 
 def save_cache(cache: dict, path: Optional[str] = None) -> None:
@@ -88,17 +128,54 @@ def lookup(key: str, path: Optional[str] = None) -> Optional[FusedConfig]:
 
 def get_config(kind: str, *, H: int, Kh: int, D: int, gamma_max: int = 0,
                block_size: int = 0, shape: str = "linear",
+               kv_dtype: str = "bf16",
                path: Optional[str] = None) -> FusedConfig:
     """Dispatch-time lookup with the safe default fallback."""
     cfg = lookup(tune_key(kind, H=H, Kh=Kh, D=D, gamma_max=gamma_max,
-                          block_size=block_size, shape=shape), path)
+                          block_size=block_size, shape=shape,
+                          kv_dtype=kv_dtype), path)
     return cfg if cfg is not None else DEFAULT_CONFIG
 
 
-def candidate_configs(kind: str, block_size: int) -> List[FusedConfig]:
+def roofline_candidates(kind: str, block_size: int,
+                        path: Optional[str] = None) -> List[FusedConfig]:
+    """Extra grid points derived from the dry-run roofline records
+    (``results/dryrun_baseline.json``, the table benchmarks/roofline.py
+    renders).  Memory-bound arches reward deeper DMA pipelining and
+    smaller KV sub-tiles (more overlap windows per block); compute-bound
+    ones reward a wider query tile amortizing each streamed block over
+    more rows.  Missing/empty file -> no extra candidates (the static
+    grid stands alone)."""
+    try:
+        with open(path or ROOFLINE_PATH) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    doms = set()
+    for rec in records if isinstance(records, list) else []:
+        if not isinstance(rec, dict):
+            continue
+        rf = rec.get("roofline") or {}
+        if rec.get("status", "ok") == "ok" and rf.get("dominant"):
+            doms.add(rf["dominant"])
+    out = []
+    if "memory" in doms:
+        bk = (block_size // 4
+              if block_size % 4 == 0 and block_size // 4 >= 8 else 0)
+        out += [FusedConfig(bq=DEFAULT_CONFIG.bq, bk=bk, depth=d)
+                for d in (3, 4)]
+    if ("compute" in doms or "collective" in doms) and kind == "verify":
+        out.append(FusedConfig(bq=256, bk=0, depth=1))
+    return out
+
+
+def candidate_configs(kind: str, block_size: int,
+                      roofline_path: Optional[str] = None) \
+        -> List[FusedConfig]:
     """Small search grid: bq tiles at/below the common packed widths, bk
     halving down to 8 slots, depth 1 (pure pipelining) or 2 (explicit
-    double-buffer).  Kept deliberately tiny — tuning runs kernels."""
+    double-buffer), plus any roofline-derived points for this machine's
+    dry-run profile.  Kept deliberately tiny — tuning runs kernels."""
     bks = [0]
     if block_size % 2 == 0 and block_size // 2 >= 8:
         bks.append(block_size // 2)
@@ -109,6 +186,9 @@ def candidate_configs(kind: str, block_size: int) -> List[FusedConfig]:
             for depth in (1, 2):
                 out.append(FusedConfig(bq=bq or DEFAULT_CONFIG.bq, bk=bk,
                                        depth=depth))
+    for cfg in roofline_candidates(kind, block_size, roofline_path):
+        if cfg not in out:
+            out.append(cfg)
     return out
 
 
@@ -160,15 +240,24 @@ def _synthetic_pool(H, Kh, D, gamma_max, block_size, seed=0):
 
 def autotune(kind: str, *, H: int, Kh: int, D: int, gamma_max: int,
              block_size: int, shape: str = "linear",
+             kv_dtype: str = "bf16",
              path: Optional[str] = None, seed: int = 0) -> FusedConfig:
     """Benchmark the candidate grid for one tune key, persist and return
-    the winner.  Safe to re-run (overwrites the entry)."""
+    the winner.  Safe to re-run (overwrites the entry).  Quantized
+    ``kv_dtype`` tunes against int8/fp8 synthetic pools with scale
+    sidecars, so the winner reflects the dequant inner loop."""
+    from repro.kernels import quant
     from repro.kernels.fused_decode import fused_paged_decode
     from repro.kernels.fused_verify import fused_paged_verify
 
     syn = _synthetic_pool(H, Kh, D, gamma_max, block_size, seed)
     B, W, rng = syn["B"], syn["W"], syn["rng"]
     interpret = jax.default_backend() != "tpu"
+    k_scale = v_scale = None
+    qdt = quant.storage_dtype(kv_dtype)
+    if qdt is not None:
+        syn["k_pool"], k_scale = quant.quantize(syn["k_pool"], qdt)
+        syn["v_pool"], v_scale = quant.quantize(syn["v_pool"], qdt)
 
     if kind == "verify":
         Tq = B * (W + 1)
@@ -185,7 +274,8 @@ def autotune(kind: str, *, H: int, Kh: int, D: int, gamma_max: int,
             return fused_paged_verify(
                 q, syn["k_pool"], syn["v_pool"], syn["pool_seg"],
                 syn["pool_pos"], q_seg, q_pos, syn["ids"], syn["owner"],
-                anc, node, bq=cfg.bq, bk=cfg.bk, depth=cfg.depth,
+                anc, node, k_scale, v_scale,
+                bq=cfg.bq, bk=cfg.bk, depth=cfg.depth,
                 interpret=interpret)
     elif kind == "decode":
         T = W + 1
@@ -198,6 +288,7 @@ def autotune(kind: str, *, H: int, Kh: int, D: int, gamma_max: int,
             return fused_paged_decode(
                 q, syn["k_pool"], syn["v_pool"], syn["pool_seg"],
                 syn["pool_pos"], q_seg, q_pos, syn["bt"],
+                k_scale, v_scale,
                 bk=cfg.bk, depth=cfg.depth, interpret=interpret)
     else:
         raise ValueError(f"unknown kernel kind {kind!r}")
@@ -208,7 +299,7 @@ def autotune(kind: str, *, H: int, Kh: int, D: int, gamma_max: int,
         if us < best_us:
             best, best_us = cfg, us
     key = tune_key(kind, H=H, Kh=Kh, D=D, gamma_max=gamma_max,
-                   block_size=block_size, shape=shape)
+                   block_size=block_size, shape=shape, kv_dtype=kv_dtype)
     cache = load_cache(path)
     cache[key] = {"bq": best.bq, "bk": best.bk, "depth": best.depth,
                   "us": round(best_us, 1),

@@ -39,9 +39,11 @@ NEG = -1e30
 
 
 def _fused_decode_kernel(bt_ref, nlive_ref, q_seg_ref, q_pos_ref, q_ref,
-                         *refs, nsteps: int, depth: int, scale: float):
-    tiles = refs[:4 * depth]
-    o_ref, m_ref, l_ref, acc_ref = refs[4 * depth:]
+                         *refs, nsteps: int, depth: int, scale: float,
+                         quantized: bool = False):
+    group = 6 if quantized else 4
+    tiles = refs[:group * depth]
+    o_ref, m_ref, l_ref, acc_ref = refs[group * depth:]
     b = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -54,7 +56,7 @@ def _fused_decode_kernel(bt_ref, nlive_ref, q_seg_ref, q_pos_ref, q_ref,
     q_seg = q_seg_ref[0]                    # (T,)
     q_pos = q_pos_ref[0]
 
-    def _tile(i, pos_ref, seg_ref, k_ref, v_ref):
+    def _tile(i, pos_ref, seg_ref, k_ref, v_ref, *sc_refs):
         t = j * depth + i
 
         @pl.when(t < nlive_ref[b])
@@ -62,6 +64,10 @@ def _fused_decode_kernel(bt_ref, nlive_ref, q_seg_ref, q_pos_ref, q_ref,
             q = q_ref[0].astype(jnp.float32) * scale        # (T, H, D)
             k = k_ref[0].astype(jnp.float32)                # (bk, Kh, D)
             v = v_ref[0].astype(jnp.float32)
+            if quantized:
+                ks_ref, vs_ref = sc_refs
+                k = k * ks_ref[0][..., None]
+                v = v * vs_ref[0][..., None]
             T, H, D = q.shape
             bk, Kh, _ = k.shape
             G = H // Kh
@@ -98,7 +104,7 @@ def _fused_decode_kernel(bt_ref, nlive_ref, q_seg_ref, q_pos_ref, q_ref,
             l_ref[...] = l_new.reshape(T, Kh * G)
 
     for i in range(depth):
-        _tile(i, *tiles[4 * i:4 * (i + 1)])
+        _tile(i, *tiles[group * i:group * (i + 1)])
 
     @pl.when(j == nsteps - 1)
     def _finish():
@@ -110,7 +116,8 @@ def _fused_decode_kernel(bt_ref, nlive_ref, q_seg_ref, q_pos_ref, q_ref,
 
 @functools.partial(jax.jit, static_argnames=("bk", "depth", "interpret"))
 def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
-                       q_seg, q_pos, block_tables, *,
+                       q_seg, q_pos, block_tables,
+                       k_scale=None, v_scale=None, *,
                        bk: int = 0, depth: int = 1,
                        interpret: bool = False):
     """Multi-token paged decode streaming each row's blocks from the pool.
@@ -121,6 +128,10 @@ def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
     ignored) and position; block_tables: (B, NB) physical block per
     logical block, -1 = unallocated (prefix-allocated per row).  Returns
     (B, T, H, D).  ``bk``/``depth`` as in ``fused_paged_verify``.
+
+    k_scale/v_scale: optional (N, bs, Kh) float32 sidecars for quantized
+    pools — each KV tile is dequantized in-register (``scale * q``) right
+    after its DMA, under the same online softmax.
     """
     B, T, H, D = q.shape
     N, bs, Kh, _ = k_pool.shape
@@ -131,10 +142,14 @@ def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
     f = bs // bk
     scale = 1.0 / np.sqrt(D)
 
+    quantized = k_scale is not None
     kp = k_pool.reshape(N * f, bk, Kh, D)
     vp = v_pool.reshape(N * f, bk, Kh, D)
     seg_p = pool_seg.astype(jnp.int32).reshape(N * f, bk)
     pos_p = pool_pos.astype(jnp.int32).reshape(N * f, bk)
+    if quantized:
+        ksp = k_scale.reshape(N * f, bk, Kh)
+        vsp = v_scale.reshape(N * f, bk, Kh)
 
     bt = block_tables.astype(jnp.int32)
     bt_sub = (jnp.maximum(bt, 0)[:, :, None] * f
@@ -158,6 +173,9 @@ def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
     def slot_map(i):
         return lambda b, j, bt_s, nl: (bt_s[b, clamp(b, j, i, nl)], 0)
 
+    def sc_map(i):
+        return lambda b, j, bt_s, nl: (bt_s[b, clamp(b, j, i, nl)], 0, 0)
+
     tile_specs = []
     tile_args = []
     for i in range(depth):
@@ -166,6 +184,10 @@ def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
                        pl.BlockSpec((1, bk, Kh, D), kv_map(i)),
                        pl.BlockSpec((1, bk, Kh, D), kv_map(i))]
         tile_args += [pos_p, seg_p, kp, vp]
+        if quantized:
+            tile_specs += [pl.BlockSpec((1, bk, Kh), sc_map(i)),
+                           pl.BlockSpec((1, bk, Kh), sc_map(i))]
+            tile_args += [ksp, vsp]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -185,7 +207,7 @@ def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
     )
     return pl.pallas_call(
         functools.partial(_fused_decode_kernel, nsteps=nsteps, depth=depth,
-                          scale=scale),
+                          scale=scale, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, T, H, D), q.dtype),
         interpret=interpret,

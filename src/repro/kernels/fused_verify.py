@@ -42,9 +42,11 @@ NEG = -1e30
 
 def _fused_verify_kernel(ids_ref, owner_ref, nlive_ref,
                          q_seg_ref, q_pos_ref, q_anc_ref, q_ref, *refs,
-                         nsteps: int, depth: int, scale: float):
-    tiles = refs[:5 * depth]
-    o_ref, m_ref, l_ref, acc_ref = refs[5 * depth:]
+                         nsteps: int, depth: int, scale: float,
+                         quantized: bool = False):
+    group = 7 if quantized else 5
+    tiles = refs[:group * depth]
+    o_ref, m_ref, l_ref, acc_ref = refs[group * depth:]
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -59,7 +61,7 @@ def _fused_verify_kernel(ids_ref, owner_ref, nlive_ref,
     q_lo, q_hi = jnp.min(q_seg), jnp.max(q_seg)
     q_pmax = jnp.max(q_pos)
 
-    def _tile(i, pos_ref, seg_ref, node_ref, k_ref, v_ref):
+    def _tile(i, pos_ref, seg_ref, node_ref, k_ref, v_ref, *sc_refs):
         t = j * depth + i
         owner = owner_ref[t]                # segment owning sub-block t
         kv_pos = pos_ref[0]                 # (bk,)
@@ -76,6 +78,10 @@ def _fused_verify_kernel(ids_ref, owner_ref, nlive_ref,
             q = q_ref[...].astype(jnp.float32) * scale      # (BQ, H, D)
             k = k_ref[0].astype(jnp.float32)                # (bk, Kh, D)
             v = v_ref[0].astype(jnp.float32)
+            if quantized:
+                ks_ref, vs_ref = sc_refs
+                k = k * ks_ref[0][..., None]
+                v = v * vs_ref[0][..., None]
             BQ, H, D = q.shape
             bk, Kh, _ = k.shape
             G = H // Kh
@@ -118,7 +124,7 @@ def _fused_verify_kernel(ids_ref, owner_ref, nlive_ref,
             l_ref[...] = l_new.reshape(BQ, Kh * G)
 
     for i in range(depth):
-        _tile(i, *tiles[5 * i:5 * (i + 1)])
+        _tile(i, *tiles[group * i:group * (i + 1)])
 
     @pl.when(j == nsteps - 1)
     def _finish():
@@ -132,7 +138,8 @@ def _fused_verify_kernel(ids_ref, owner_ref, nlive_ref,
                    static_argnames=("bq", "bk", "depth", "interpret"))
 def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
                        q_seg, q_pos, block_ids, block_owner,
-                       q_anc=None, block_node=None, *,
+                       q_anc=None, block_node=None,
+                       k_scale=None, v_scale=None, *,
                        bq: int = 128, bk: int = 0, depth: int = 1,
                        interpret: bool = False):
     """Single-launch packed verification streaming KV from the pool.
@@ -145,6 +152,10 @@ def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
 
     ``bq``/``bk``/``depth`` are the autotuned tile knobs (module
     docstring); ``bk`` in (0, non-divisor of bs) falls back to ``bs``.
+
+    k_scale/v_scale: optional (N, bs, Kh) float32 sidecars for quantized
+    pools — KV tiles stream as int8/fp8 and are dequantized in-register
+    (``scale * q``) before the mask/softmax math.
     """
     Tq, H, D = q.shape
     N, bs, Kh, _ = k_pool.shape
@@ -161,11 +172,15 @@ def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
         block_node = jnp.full((M, bs), -1, jnp.int32)
 
     # sub-tile view of the pool — a reshape of contiguous memory, no copy
+    quantized = k_scale is not None
     kp = k_pool.reshape(N * f, bk, Kh, D)
     vp = v_pool.reshape(N * f, bk, Kh, D)
     seg_p = pool_seg.astype(jnp.int32).reshape(N * f, bk)
     pos_p = pool_pos.astype(jnp.int32).reshape(N * f, bk)
     node_p = block_node.astype(jnp.int32).reshape(M * f, bk)
+    if quantized:
+        ksp = k_scale.reshape(N * f, bk, Kh)
+        vsp = v_scale.reshape(N * f, bk, Kh)
 
     ids = jnp.maximum(block_ids.astype(jnp.int32), 0)
     owner = block_owner.astype(jnp.int32)
@@ -210,6 +225,9 @@ def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
     def q_map(qi, j, ids_s, ow, nl):
         return (qi,)
 
+    def sc_map(i):
+        return lambda qi, j, ids_s, ow, nl: (ids_s[clamp(j, i, nl)], 0, 0)
+
     tile_specs = []
     tile_args = []
     for i in range(depth):
@@ -219,6 +237,10 @@ def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
                        pl.BlockSpec((1, bk, Kh, D), kv_map(i)),
                        pl.BlockSpec((1, bk, Kh, D), kv_map(i))]
         tile_args += [pos_p, seg_p, node_p, kp, vp]
+        if quantized:
+            tile_specs += [pl.BlockSpec((1, bk, Kh), sc_map(i)),
+                           pl.BlockSpec((1, bk, Kh), sc_map(i))]
+            tile_args += [ksp, vsp]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -240,7 +262,7 @@ def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
     )
     out = pl.pallas_call(
         functools.partial(_fused_verify_kernel, nsteps=nsteps, depth=depth,
-                          scale=scale),
+                          scale=scale, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Tq_p, H, D), q.dtype),
         interpret=interpret,

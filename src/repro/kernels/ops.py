@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels import autotune
+from repro.kernels import autotune, quant
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_decode import fused_paged_decode as _fused_decode
@@ -44,21 +44,24 @@ def decode_attention(q, k, v, lengths, *, bk=None, interpret=None):
     return _decode(q, k, v, lengths, bk=bk, interpret=interpret)
 
 
-def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                           k_scale=None, v_scale=None, *,
                            interpret=None):
     if interpret is None:
         interpret = _auto_interpret()
     return _paged_decode(q, k_pool, v_pool, block_tables, lengths,
-                         interpret=interpret)
+                         k_scale, v_scale, interpret=interpret)
 
 
 def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
-                           q_seg, q_pos, block_ids, block_owner, *,
+                           q_seg, q_pos, block_ids, block_owner,
+                           k_scale=None, v_scale=None, *,
                            bq: int = 128, interpret=None):
     if interpret is None:
         interpret = _auto_interpret()
     return _paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
                          q_seg, q_pos, block_ids, block_owner,
+                         k_scale=k_scale, v_scale=v_scale,
                          bq=bq, interpret=interpret)
 
 
@@ -72,12 +75,14 @@ def _resolve_config(kind, q, k_pool, gamma_max, shape, config):
         return config
     return autotune.get_config(
         kind, H=q.shape[-2], Kh=k_pool.shape[2], D=q.shape[-1],
-        gamma_max=gamma_max, block_size=k_pool.shape[1], shape=shape)
+        gamma_max=gamma_max, block_size=k_pool.shape[1], shape=shape,
+        kv_dtype=quant.dtype_name(k_pool.dtype))
 
 
 def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
                        q_seg, q_pos, block_ids, block_owner,
-                       q_anc=None, block_node=None, *,
+                       q_anc=None, block_node=None,
+                       k_scale=None, v_scale=None, *,
                        config=None, gamma_max: int = 0, interpret=None):
     """Single-launch packed verification (kernels/fused_verify.py): KV
     streams straight from the pool, no gathered copy.  ``config`` (a
@@ -89,12 +94,14 @@ def fused_paged_verify(q, k_pool, v_pool, pool_seg, pool_pos,
     cfg = _resolve_config("verify", q, k_pool, gamma_max, shape, config)
     return _fused_verify(q, k_pool, v_pool, pool_seg, pool_pos,
                          q_seg, q_pos, block_ids, block_owner,
-                         q_anc, block_node, bq=cfg.bq, bk=cfg.bk,
+                         q_anc, block_node, k_scale, v_scale,
+                         bq=cfg.bq, bk=cfg.bk,
                          depth=cfg.depth, interpret=interpret)
 
 
 def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
-                       q_seg, q_pos, block_tables, *,
+                       q_seg, q_pos, block_tables,
+                       k_scale=None, v_scale=None, *,
                        config=None, gamma_max: int = 0, interpret=None):
     """Single-launch multi-token paged decode (kernels/fused_decode.py)
     with block-table prefetch double-buffered against tile compute."""
@@ -102,5 +109,5 @@ def fused_paged_decode(q, k_pool, v_pool, pool_seg, pool_pos,
         interpret = _auto_interpret()
     cfg = _resolve_config("decode", q, k_pool, gamma_max, "linear", config)
     return _fused_decode(q, k_pool, v_pool, pool_seg, pool_pos,
-                         q_seg, q_pos, block_tables, bk=cfg.bk,
-                         depth=cfg.depth, interpret=interpret)
+                         q_seg, q_pos, block_tables, k_scale, v_scale,
+                         bk=cfg.bk, depth=cfg.depth, interpret=interpret)

@@ -53,8 +53,12 @@ NEG = -1e30
 
 # ----------------------------------------------------------------- decode --
 
-def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, nb: int, bs: int, scale: float):
+def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *refs,
+                   nb: int, bs: int, scale: float, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -72,6 +76,9 @@ def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0].astype(jnp.float32) * scale       # (H, D)
         k = k_ref[0].astype(jnp.float32)               # (bs, Kh, D)
         v = v_ref[0].astype(jnp.float32)
+        if quantized:                                  # scale * int8 inline
+            k = k * ks_ref[0][..., None]               # (bs, Kh, 1)
+            v = v * vs_ref[0][..., None]
         H, D = q.shape
         Kh = k.shape[1]
         G = H // Kh
@@ -101,11 +108,18 @@ def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                           k_scale=None, v_scale=None, *,
                            interpret: bool = False):
     """q: (B, H, D); k_pool, v_pool: (N, bs, Kh, D);
     block_tables: (B, NB) int32 physical block per logical block (< 0 =
     unallocated); lengths: (B,) live KV prefix per row.  Returns (B, H, D).
+
+    Optional ``k_scale``/``v_scale`` (N, bs, Kh) float32 dequantization
+    sidecars for int8/fp8 pools (kernels/quant.py): the kernel streams
+    the quantized blocks plus their scale tiles through the same
+    physical-block index map and applies ``scale * int8`` inline, under
+    the online softmax — no dequantized pool copy.
 
     Requires ``lengths[b] <= allocated_blocks(b) * bs`` — the pool
     allocator's append-a-block invariant.
@@ -116,6 +130,7 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     scale = 1.0 / np.sqrt(D)
     bt = block_tables.astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
+    quantized = k_scale is not None
 
     def kv_map(b, j, bt_ref, len_ref):
         # clamp to the row's last live block: trailing grid steps revisit
@@ -124,14 +139,24 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
         jj = jnp.minimum(j, live)
         return (jnp.maximum(bt_ref[b, jj], 0), 0, 0, 0)
 
+    def sc_map(b, j, bt_ref, len_ref):
+        return kv_map(b, j, bt_ref, len_ref)[:3]
+
+    in_specs = [
+        pl.BlockSpec((1, H, D), lambda b, j, bt, ln: (b, 0, 0)),
+        pl.BlockSpec((1, bs, Kh, D), kv_map),
+        pl.BlockSpec((1, bs, Kh, D), kv_map),
+    ]
+    args = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bs, Kh), sc_map),
+                     pl.BlockSpec((1, bs, Kh), sc_map)]
+        args += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, NB),
-        in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, j, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, bs, Kh, D), kv_map),
-            pl.BlockSpec((1, bs, Kh, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, D), lambda b, j, bt, ln: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, H), jnp.float32),
@@ -140,19 +165,23 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_decode_kernel, nb=NB, bs=bs, scale=scale),
+        functools.partial(_decode_kernel, nb=NB, bs=bs, scale=scale,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
-    )(bt, lengths, q, k_pool, v_pool)
+    )(bt, lengths, *args)
 
 
 # ----------------------------------------------------------------- verify --
 
 def _verify_kernel(ids_ref, owner_ref, nlive_ref, q_seg_ref, q_pos_ref,
                    q_anc_ref, pos_ref, seg_ref, node_ref, q_ref, k_ref,
-                   v_ref, o_ref, m_ref, l_ref, acc_ref, *, nb: int,
-                   scale: float):
+                   v_ref, *refs, nb: int, scale: float, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -180,6 +209,9 @@ def _verify_kernel(ids_ref, owner_ref, nlive_ref, q_seg_ref, q_pos_ref,
         q = q_ref[...].astype(jnp.float32) * scale      # (BQ, H, D)
         k = k_ref[0].astype(jnp.float32)                # (bs, Kh, D)
         v = v_ref[0].astype(jnp.float32)
+        if quantized:                                   # scale * int8 inline
+            k = k * ks_ref[0][..., None]                # (bs, Kh, 1)
+            v = v * vs_ref[0][..., None]
         BQ, H, D = q.shape
         bs, Kh, _ = k.shape
         G = H // Kh
@@ -230,7 +262,8 @@ def _verify_kernel(ids_ref, owner_ref, nlive_ref, q_seg_ref, q_pos_ref,
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
                            q_seg, q_pos, block_ids, block_owner,
-                           q_anc=None, block_node=None, *,
+                           q_anc=None, block_node=None,
+                           k_scale=None, v_scale=None, *,
                            bq: int = 128, interpret: bool = False):
     """Packed verification over live pool blocks (paper Eq. 13, paged).
 
@@ -243,7 +276,9 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
     entry: the block is skipped).  Optional tree-speculation topology:
     q_anc (Tq,) ancestor bitmask per query, block_node (M, bs) per-slot
     node tags aligned with block_ids (-1 committed, -2 dead, n >= 0 tree
-    node).  Returns (Tq, H, D).
+    node).  Optional ``k_scale``/``v_scale`` (N, bs, Kh) float32 sidecars
+    dequantize int8/fp8 pools in-kernel (``scale * int8`` on the streamed
+    tile — see ``paged_decode_attention``).  Returns (Tq, H, D).
     """
     Tq, H, D = q.shape
     N, bs, Kh, _ = k_pool.shape
@@ -279,24 +314,34 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
     def blk(i, j, ids, ow, nl):
         return (ids[_jc(j, nl)], 0)
 
+    quantized = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
+        pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
+        pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
+        pl.BlockSpec((1, bs), blk),
+        pl.BlockSpec((1, bs), blk),
+        # block_node is in *gathered* order, aligned with block_ids
+        pl.BlockSpec((1, bs), lambda i, j, ids, ow, nl:
+                     (_jc(j, nl), 0)),
+        pl.BlockSpec((bq, H, D), lambda i, j, ids, ow, nl: (i, 0, 0)),
+        pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow, nl:
+                     (ids[_jc(j, nl)], 0, 0, 0)),
+        pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow, nl:
+                     (ids[_jc(j, nl)], 0, 0, 0)),
+    ]
+    args = [qp, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bs, Kh), lambda i, j, ids, ow, nl:
+                                  (ids[_jc(j, nl)], 0, 0)),
+                     pl.BlockSpec((1, bs, Kh), lambda i, j, ids, ow, nl:
+                                  (ids[_jc(j, nl)], 0, 0))]
+        args += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(Tq_p // bq, M),
-        in_specs=[
-            pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
-            pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
-            pl.BlockSpec((bq,), lambda i, j, ids, ow, nl: (i,)),
-            pl.BlockSpec((1, bs), blk),
-            pl.BlockSpec((1, bs), blk),
-            # block_node is in *gathered* order, aligned with block_ids
-            pl.BlockSpec((1, bs), lambda i, j, ids, ow, nl:
-                         (_jc(j, nl), 0)),
-            pl.BlockSpec((bq, H, D), lambda i, j, ids, ow, nl: (i, 0, 0)),
-            pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow, nl:
-                         (ids[_jc(j, nl)], 0, 0, 0)),
-            pl.BlockSpec((1, bs, Kh, D), lambda i, j, ids, ow, nl:
-                         (ids[_jc(j, nl)], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bq, H, D),
                                lambda i, j, ids, ow, nl: (i, 0, 0)),
         scratch_shapes=[
@@ -306,11 +351,12 @@ def paged_verify_attention(q, k_pool, v_pool, pool_seg, pool_pos,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_verify_kernel, nb=M, scale=scale),
+        functools.partial(_verify_kernel, nb=M, scale=scale,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Tq_p, H, D), q.dtype),
         interpret=interpret,
     )(ids, owner, nlive, q_seg_p, q_pos_p, q_anc_p,
       pool_pos.astype(jnp.int32), pool_seg.astype(jnp.int32),
-      block_node.astype(jnp.int32), qp, k_pool, v_pool)
+      block_node.astype(jnp.int32), *args)
     return out[:Tq]

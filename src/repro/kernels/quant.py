@@ -1,0 +1,94 @@
+"""Quantized paged-KV block helpers (ISSUE 8).
+
+SPIN's verification phase re-scores every draft token with the LLM, so
+precision spent on speculative KV state is pure capacity overhead — the
+binding constraint in every serving benchmark is *blocks*, not FLOPs.
+These helpers implement the storage half of ``--kv-dtype``:
+
+* K/V block pools store ``int8`` (symmetric, qmax 127) or fp8
+  ``float8_e4m3fn`` (qmax 448) instead of the compute dtype;
+* a float32 *scale sidecar* of shape ``(num_blocks, block_size, Kh)``
+  rides inside each attention cache entry next to ``k``/``v`` — indexed
+  by the same block table, copied by the same CoW whole-block copy, freed
+  by the same refcount drop.  Scales are per (slot-in-block, kv head):
+  per-slot granularity means appending into a partially filled block
+  never requantizes earlier slots (a true per-block amax would have to),
+  and per-head granularity keeps heads with small activations from being
+  crushed by a loud sibling head.
+
+Quantize-on-write happens at the two scatter sites (``serving/pool.py``
+monolithic insert, ``serving/paged._write_kv`` decode/verify/chunk
+appends); dequantize happens *inside* the Pallas kernels
+(``scale * int8`` on the streamed tile, under the online softmax) or
+post-gather on the XLA fallback path — a dense dequantized copy of the
+pool is never materialized.
+
+``"bf16"`` (the default ``--kv-dtype``) means "store the model's compute
+dtype" — no scale leaves exist and every byte layout is identical to the
+unquantized engine, which is what makes the default bit-identical by
+construction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# kv-dtype name -> (storage dtype, symmetric quantization range)
+KV_DTYPES = {
+    "int8": (jnp.int8, 127.0),
+    "fp8": (jnp.float8_e4m3fn, 448.0),
+}
+KV_DTYPE_NAMES = ("bf16",) + tuple(KV_DTYPES)
+
+
+def is_quantized(name: str) -> bool:
+    return name in KV_DTYPES
+
+
+def storage_dtype(name: str):
+    """Pool leaf dtype for a kv-dtype name; None = compute dtype."""
+    if name in KV_DTYPES:
+        return KV_DTYPES[name][0]
+    if name == "bf16":
+        return None
+    raise ValueError(
+        f"kv_dtype must be one of {'/'.join(KV_DTYPE_NAMES)}, got {name!r}")
+
+
+def dtype_name(dt) -> str:
+    """kv-dtype name of a pool leaf dtype (autotune cache keys, stats)."""
+    dt = jnp.dtype(dt)
+    for name, (qdt, _) in KV_DTYPES.items():
+        if dt == jnp.dtype(qdt):
+            return name
+    return "bf16"
+
+
+def qmax_of(dt) -> float:
+    dt = jnp.dtype(dt)
+    for qdt, qmax in KV_DTYPES.values():
+        if dt == jnp.dtype(qdt):
+            return qmax
+    raise ValueError(f"{dt} is not a quantized KV dtype")
+
+
+def quantize(x, qdt):
+    """Symmetric per-last-axis quantization: ``x (..., D)`` ->
+    ``(q (..., D) in qdt, scale (...) float32)`` with
+    ``scale = amax / qmax`` so ``scale * q ~= x``.  All-zero rows get
+    scale 0 and quantize to exact zeros."""
+    qdt = jnp.dtype(qdt)
+    qmax = qmax_of(qdt)
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / qmax
+    q = xf / jnp.where(scale > 0, scale, 1.0)[..., None]
+    q = jnp.clip(q, -qmax, qmax)
+    if qdt == jnp.dtype(jnp.int8):
+        q = jnp.round(q)
+    return q.astype(qdt), scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    """``scale * q`` with the scale broadcast over the trailing D axis."""
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)) \
+        .astype(dtype)

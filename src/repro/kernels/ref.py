@@ -7,7 +7,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import quant
+
 NEG = -1e30
+
+
+def _maybe_dequant(pool, scale, idx):
+    """Gather pool blocks by ``idx``; dequantize against the (same-indexed)
+    scale sidecar when one is provided (quantized-pool oracles)."""
+    g = pool[idx]
+    if scale is None:
+        return g
+    return quant.dequantize(g, scale[idx])
 
 
 def tree_mask_term(q_anc, kv_node):
@@ -82,28 +93,34 @@ def mha_ref(q, k, v, *, causal=True, window=0):
     return o.reshape(B, S, H, Dh).astype(q.dtype)
 
 
-def paged_decode_ref(q, k_pool, v_pool, block_tables, lengths):
+def paged_decode_ref(q, k_pool, v_pool, block_tables, lengths,
+                     k_scale=None, v_scale=None):
     """Gather each row's block list into a dense view, then plain decode.
     q: (B, H, D); pools: (N, bs, Kh, D); block_tables: (B, NB) (< 0 =
-    unallocated); lengths: (B,)."""
+    unallocated); lengths: (B,).  Optional (N, bs, Kh) scale sidecars
+    dequantize int8/fp8 pools post-gather."""
     B = q.shape[0]
     N, bs = k_pool.shape[0], k_pool.shape[1]
     bt = jnp.maximum(block_tables, 0)
-    k = k_pool[bt].reshape(B, -1, *k_pool.shape[2:])
-    v = v_pool[bt].reshape(B, -1, *v_pool.shape[2:])
+    k = _maybe_dequant(k_pool, k_scale, bt).reshape(
+        B, -1, *k_pool.shape[2:])
+    v = _maybe_dequant(v_pool, v_scale, bt).reshape(
+        B, -1, *v_pool.shape[2:])
     return decode_ref(q, k, v, lengths)
 
 
 def paged_verify_ref(q, k_pool, v_pool, pool_seg, pool_pos,
                      q_seg, q_pos, block_ids, block_owner,
-                     q_anc=None, block_node=None):
+                     q_anc=None, block_node=None,
+                     k_scale=None, v_scale=None):
     """Gather the live blocks into a flat packed view, then Eq. (13).
     ``block_node`` (M, bs) carries per-slot tree-node tags aligned with
-    ``block_ids`` (see ``tree_mask_term``)."""
+    ``block_ids`` (see ``tree_mask_term``); optional (N, bs, Kh) scale
+    sidecars dequantize int8/fp8 pools post-gather."""
     ids = jnp.maximum(block_ids, 0)
     bs = k_pool.shape[1]
-    k = k_pool[ids].reshape(-1, *k_pool.shape[2:])
-    v = v_pool[ids].reshape(-1, *v_pool.shape[2:])
+    k = _maybe_dequant(k_pool, k_scale, ids).reshape(-1, *k_pool.shape[2:])
+    v = _maybe_dequant(v_pool, v_scale, ids).reshape(-1, *v_pool.shape[2:])
     slot_seg = pool_seg[ids].reshape(-1)
     kv_pos = pool_pos[ids].reshape(-1)
     owner = jnp.repeat(block_owner, bs)
@@ -114,19 +131,23 @@ def paged_verify_ref(q, k_pool, v_pool, pool_seg, pool_pos,
 
 
 def paged_seq_decode_ref(q, k_pool, v_pool, pool_seg, pool_pos,
-                         q_seg, q_pos, block_tables):
+                         q_seg, q_pos, block_tables,
+                         k_scale=None, v_scale=None):
     """Oracle for ``kernels/fused_decode.fused_paged_decode``: gather each
     row's block list dense, then segment/position-masked attention.
 
     q: (B, T, H, D); pools: (N, bs, Kh, D); pool_seg/pool_pos: (N, bs);
     q_seg/q_pos: (B, T) (seg -1 = padding query -> zero output);
-    block_tables: (B, NB), -1 = unallocated (slots masked)."""
+    block_tables: (B, NB), -1 = unallocated (slots masked); optional
+    (N, bs, Kh) scale sidecars dequantize int8/fp8 pools post-gather."""
     B, T, H, Dh = q.shape
     bs, Kh = k_pool.shape[1], k_pool.shape[2]
     G = H // Kh
     g = jnp.maximum(block_tables, 0)
-    k = k_pool[g].reshape(B, -1, Kh, Dh).astype(jnp.float32)
-    v = v_pool[g].reshape(B, -1, Kh, Dh).astype(jnp.float32)
+    k = _maybe_dequant(k_pool, k_scale, g) \
+        .reshape(B, -1, Kh, Dh).astype(jnp.float32)
+    v = _maybe_dequant(v_pool, v_scale, g) \
+        .reshape(B, -1, Kh, Dh).astype(jnp.float32)
     seg = pool_seg[g].reshape(B, -1)
     kv_pos = pool_pos[g].reshape(B, -1)
     live = jnp.repeat(block_tables >= 0, bs, axis=1)

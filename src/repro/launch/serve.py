@@ -164,6 +164,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "paged-attention path bit-identically (needs "
                          "--kv-layout paged; falls back with a warning "
                          "otherwise)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8", "fp8"],
+                    help="paged-KV block storage dtype: bf16 stores the "
+                         "model's compute dtype (bit-identical default); "
+                         "int8/fp8 store quantized blocks with per-(slot, "
+                         "head) float32 scale sidecars — 2-4x more "
+                         "resident contexts per --kv-budget, dequant "
+                         "fused into the attention kernels (needs "
+                         "--kv-layout paged; falls back to bf16 with a "
+                         "warning otherwise)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="independent engine replicas behind the router "
                          "(serving/router.py); --capacity and --kv-budget "
@@ -247,6 +257,7 @@ def main(argv=None):
                             spec_shape=args.spec_shape,
                             spec_branch=args.spec_branch,
                             fused_kernels=args.fused_kernels,
+                            kv_dtype=args.kv_dtype,
                             seed=seed)
         return SpinEngine(llm, ssms, sel, ecfg)
 

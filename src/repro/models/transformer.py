@@ -215,13 +215,38 @@ def _check_pageable(cfg):
                          "buffers (window tail lives in the dense layout)")
 
 
-def init_paged_cache(cfg, num_blocks, block_size):
+def init_paged_cache(cfg, num_blocks, block_size, kv_dtype: str = "bf16"):
     """Paged KV block pool: same tree structure as ``init_cache`` but the
     leading cache axes are (physical block, slot-in-block) instead of
     (request row, position) — requests address it through block tables
-    (serving/pool.py).  Attention-only models; see serving/paged.py."""
+    (serving/pool.py).  Attention-only models; see serving/paged.py.
+
+    ``kv_dtype`` selects the block storage precision (kernels/quant.py):
+    ``"bf16"`` keeps the compute dtype and the exact unquantized tree;
+    ``"int8"``/``"fp8"`` store K/V quantized and add float32
+    ``k_scale``/``v_scale`` sidecar leaves of shape
+    ``(num_blocks, block_size, Kh)`` to every attention entry — indexed
+    by the same block table as the blocks they scale."""
+    from repro.kernels import quant
     _check_pageable(cfg)
-    return init_cache(cfg, num_blocks, block_size)
+    cache = init_cache(cfg, num_blocks, block_size)
+    qdt = quant.storage_dtype(kv_dtype)
+    if qdt is None:
+        return cache
+
+    def requant(entry):
+        out = dict(entry)
+        for leaf in ("k", "v"):
+            out[leaf] = jnp.zeros(entry[leaf].shape, qdt)
+            out[leaf + "_scale"] = jnp.zeros(entry[leaf].shape[:-1],
+                                             jnp.float32)
+        return out
+
+    out = {"scan": {k: requant(v) for k, v in cache["scan"].items()}}
+    for key, sub in cache.items():
+        if key != "scan":
+            out[key] = requant(sub)
+    return out
 
 
 def abstract_cache(cfg, batch, max_len):

@@ -64,7 +64,7 @@ from repro.core import spec_decode as sd
 from repro.core.gamma import GammaConfig, GammaController
 from repro.core.switching import SwitchManager
 from repro.data.workloads import Request
-from repro.kernels import autotune
+from repro.kernels import autotune, quant
 from repro.models import transformer as T
 from repro.serving.paged import paged_compatible
 from repro.serving.pool import DenseCachePool, PagedCachePool
@@ -137,6 +137,14 @@ class EngineConfig:
     # the PR-6 gather + paged-kernel path bit-identically.  Requires the
     # paged layout; "on" under a dense fallback warns and stays unfused.
     fused_kernels: str = "off"
+    # paged-KV block storage dtype (kernels/quant.py): "bf16" stores the
+    # model's compute dtype (bit-identical default); "int8"/"fp8" store
+    # quantized blocks with per-(slot, head) float32 scale sidecars —
+    # 2-4x more resident contexts at the same physical KV budget, with
+    # dequant fused into the attention kernels.  Requires the paged
+    # layout; a quantized choice under the dense fallback warns and
+    # reverts to bf16.
+    kv_dtype: str = "bf16"
 
 
 class SpinEngine:
@@ -156,6 +164,10 @@ class SpinEngine:
         if ecfg.fused_kernels not in ("on", "off"):
             raise ValueError(
                 f"unknown fused_kernels {ecfg.fused_kernels!r}")
+        if ecfg.kv_dtype not in quant.KV_DTYPE_NAMES:
+            raise ValueError(
+                f"unknown kv_dtype {ecfg.kv_dtype!r} "
+                f"(expected one of {'/'.join(quant.KV_DTYPE_NAMES)})")
         if ecfg.gamma_policy == "fixed":
             self.gamma_max = ecfg.gamma
         else:
@@ -198,6 +210,15 @@ class SpinEngine:
                 "fused_kernels='on' requires the paged KV layout; "
                 "falling back to the unfused attention path",
                 stacklevel=2)
+        # quantized blocks live in the paged pool's block/scale layout;
+        # the dense grids have no sidecar plumbing, so a dense fallback
+        # reverts to the compute dtype (mirrors the fused fallback above)
+        self.kv_dtype = ecfg.kv_dtype if self.paged else "bf16"
+        if quant.is_quantized(ecfg.kv_dtype) and not self.paged:
+            warnings.warn(
+                f"kv_dtype={ecfg.kv_dtype!r} requires the paged KV "
+                "layout; falling back to bf16 (unquantized) KV",
+                stacklevel=2)
         shape = "tree" if self.tree else "linear"
 
         def _fused_cfg(kind, b, s="linear"):
@@ -206,7 +227,7 @@ class SpinEngine:
             return autotune.get_config(
                 kind, H=b.cfg.n_heads, Kh=b.cfg.n_kv_heads, D=b.cfg.hd,
                 gamma_max=self.gamma_max, block_size=ecfg.block_size,
-                shape=s)
+                shape=s, kv_dtype=self.kv_dtype)
 
         self.fused_llm_decode = _fused_cfg("decode", llm)
         self.fused_llm_verify = _fused_cfg("verify", llm, shape)
@@ -227,13 +248,14 @@ class SpinEngine:
             budget_blocks = max(1, budget // bs)
             self.llm_pool = PagedCachePool(
                 llm.cfg, ecfg.capacity * row_mult, self.max_len, bs,
-                num_blocks=max(budget_blocks, bpr))
+                num_blocks=max(budget_blocks, bpr),
+                kv_dtype=self.kv_dtype)
             # draft pools are capacity-sized (fast switching keeps every
             # row draftable); the budget-constrained pool is the LLM's
             self.ssm_pools = [
                 PagedCachePool(b.cfg,
                                selector.cfg.batch_limits[j] * row_mult,
-                               self.max_len, bs)
+                               self.max_len, bs, kv_dtype=self.kv_dtype)
                 for j, b in enumerate(self.ssms)]
             sched_budget = budget_blocks * bs
         else:
@@ -1256,6 +1278,7 @@ class SpinEngine:
                               else 0),
             "spec_shape": "tree" if self.tree else "linear",
             "fused_kernels": "on" if self.fused else "off",
+            "kv_dtype": self.kv_dtype,
             "spec_branches": self.branches,
             "verify_tokens": self.verify_tokens_total,
             "tree_forks": self.tree_forks,

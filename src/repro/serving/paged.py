@@ -55,6 +55,7 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
+from repro.kernels import quant
 from repro.models import config as C
 from repro.models import transformer as T
 from repro.models.layers import attention
@@ -86,18 +87,45 @@ def _flat_write_idx(block_tables, positions, bs: int, oob: int):
 def _write_kv(kv_cache, widx_flat, k_new, v_new, positions, segments,
               num_blocks: int, bs: int):
     """Scatter new K/V (+pos/seg) into the flattened pool; returns the
-    updated (num_blocks, bs, ...) tree.  O(new tokens), not O(pool)."""
+    updated (num_blocks, bs, ...) tree.  O(new tokens), not O(pool).
+
+    Quantized pools (``k_scale``/``v_scale`` sidecar leaves present —
+    kernels/quant.py) quantize each new token's K/V per (slot, head) on
+    the way in and scatter the scales into the same flat slots, so the
+    write stays one pass and no dequantized pool copy ever exists."""
     Kh, hd = kv_cache["k"].shape[-2:]
-    kc = kv_cache["k"].reshape(num_blocks * bs, Kh, hd).at[widx_flat].set(
-        k_new.reshape(-1, Kh, hd).astype(kv_cache["k"].dtype))
-    vc = kv_cache["v"].reshape(num_blocks * bs, Kh, hd).at[widx_flat].set(
-        v_new.reshape(-1, Kh, hd).astype(kv_cache["v"].dtype))
-    pc = kv_cache["pos"].reshape(-1).at[widx_flat].set(positions.reshape(-1))
-    sc = kv_cache["seg"].reshape(-1).at[widx_flat].set(segments.reshape(-1))
-    return {"k": kc.reshape(num_blocks, bs, Kh, hd),
-            "v": vc.reshape(num_blocks, bs, Kh, hd),
-            "pos": pc.reshape(num_blocks, bs),
-            "seg": sc.reshape(num_blocks, bs)}
+    quantized = "k_scale" in kv_cache
+    out = dict(kv_cache)
+    for leaf, new in (("k", k_new), ("v", v_new)):
+        src = new.reshape(-1, Kh, hd)
+        pool = kv_cache[leaf]
+        if quantized:
+            src, scales = quant.quantize(src, pool.dtype)
+            sp = kv_cache[leaf + "_scale"]
+            out[leaf + "_scale"] = sp.reshape(num_blocks * bs, Kh) \
+                .at[widx_flat].set(scales) \
+                .reshape(num_blocks, bs, Kh)
+        out[leaf] = pool.reshape(num_blocks * bs, Kh, hd) \
+            .at[widx_flat].set(src.astype(pool.dtype)) \
+            .reshape(num_blocks, bs, Kh, hd)
+    out["pos"] = kv_cache["pos"].reshape(-1).at[widx_flat].set(
+        positions.reshape(-1)).reshape(num_blocks, bs)
+    out["seg"] = kv_cache["seg"].reshape(-1).at[widx_flat].set(
+        segments.reshape(-1)).reshape(num_blocks, bs)
+    return out
+
+
+def _gather_dequant(new_cache, leaf, slot, num_blocks: int, bs: int, shape,
+                    dtype):
+    """Gather pool slots ``slot`` of ``leaf`` ('k'/'v') and, on a
+    quantized pool, dequantize post-gather (the XLA fallback path — the
+    Pallas kernels dequantize in-kernel instead)."""
+    flat = new_cache[leaf].reshape(num_blocks * bs, *shape)
+    g = flat[slot]
+    if leaf + "_scale" not in new_cache:
+        return g
+    sc = new_cache[leaf + "_scale"].reshape(num_blocks * bs, shape[0])[slot]
+    return quant.dequantize(g, sc, dtype)
 
 
 def make_paged_decode_override(block_tables, num_blocks: int, bs: int):
@@ -114,13 +142,15 @@ def make_paged_decode_override(block_tables, num_blocks: int, bs: int):
         widx = _flat_write_idx(bt, positions, bs, num_blocks * bs)
         new_cache = _write_kv(kv_cache, widx.reshape(-1), k_new, v_new,
                               positions, segments, num_blocks, bs)
-        # gather each row's live blocks into a (B, nb_max*bs) view
+        # gather each row's live blocks into a (B, nb_max*bs) view;
+        # quantized pools dequantize the gathered slots (XLA fallback)
         nb_max = bt.shape[1]
         slot = (jnp.maximum(bt, 0) * bs)[:, :, None] + jnp.arange(bs)
         slot = slot.reshape(B, nb_max * bs)
-        kf = new_cache["k"].reshape(num_blocks * bs, *k_new.shape[2:])
-        vf = new_cache["v"].reshape(num_blocks * bs, *v_new.shape[2:])
-        kg, vg = kf[slot], vf[slot]
+        kg = _gather_dequant(new_cache, "k", slot, num_blocks, bs,
+                             k_new.shape[2:], k_new.dtype)
+        vg = _gather_dequant(new_cache, "v", slot, num_blocks, bs,
+                             v_new.shape[2:], v_new.dtype)
         posg = new_cache["pos"].reshape(-1)[slot]
         segg = new_cache["seg"].reshape(-1)[slot]
         live = jnp.repeat(bt >= 0, bs, axis=1)
@@ -151,7 +181,9 @@ def make_fused_decode_override(block_tables, num_blocks: int, bs: int,
                               positions, segments, num_blocks, bs)
         o = ops.fused_paged_decode(
             q, new_cache["k"], new_cache["v"], new_cache["seg"],
-            new_cache["pos"], segments, positions, bt, config=fused_cfg)
+            new_cache["pos"], segments, positions, bt,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"), config=fused_cfg)
         return o.astype(q.dtype), new_cache
 
     return override
@@ -196,9 +228,10 @@ def make_paged_verify_override(q_rows, block_tables, block_ids, block_owner,
                               positions, jnp.zeros_like(segments),
                               num_blocks, bs)
         slot = ((ids * bs)[:, None] + jnp.arange(bs)).reshape(M * bs)
-        kf = new_cache["k"].reshape(num_blocks * bs, *k_new.shape[2:])
-        vf = new_cache["v"].reshape(num_blocks * bs, *v_new.shape[2:])
-        kg, vg = kf[slot][None], vf[slot][None]
+        kg = _gather_dequant(new_cache, "k", slot, num_blocks, bs,
+                             k_new.shape[2:], k_new.dtype)[None]
+        vg = _gather_dequant(new_cache, "v", slot, num_blocks, bs,
+                             v_new.shape[2:], v_new.dtype)[None]
         posg = new_cache["pos"].reshape(-1)[slot][None]
         slot_seg = new_cache["seg"].reshape(-1)[slot]
         segg = jnp.where((slot_seg >= 0) & (jnp.repeat(owner, bs) >= 0),
@@ -241,7 +274,8 @@ def make_fused_verify_override(q_rows, block_tables, block_ids, block_owner,
         o = ops.fused_paged_verify(
             q[0], new_cache["k"], new_cache["v"], new_cache["seg"],
             new_cache["pos"], segments[0], pos, ids, owner, anc, node,
-            config=fused_cfg)
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"), config=fused_cfg)
         return o[None].astype(q.dtype), new_cache
 
     return override

@@ -17,6 +17,11 @@ Two layouts share one interface (``has/insert/evict/rows/lengths/...``):
     touch, and ``evict`` returns a block to the free list only when its
     last reference drops — the substrate for tree speculation, where every
     draft branch forks the main row and loses or wins in O(branches).
+    ``kv_dtype`` in {bf16, int8, fp8} selects the block storage
+    precision: quantized pools (kernels/quant.py) keep per-(slot, head)
+    float32 scale sidecars inside each attention entry, written by the
+    same scatters, copied by the same CoW block copy, and freed by the
+    same refcount drop as the blocks they scale.
     Attention-only models (recurrent state is
     O(1)/request and stays dense); see ``serving/paged.py`` for how the
     model forward addresses the pool.
@@ -43,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import quant
 from repro.models import transformer as T
 
 
@@ -208,19 +214,33 @@ def _map_attn_entries(pool_tree, fn):
 def _blocks_write(pool_tree, one_tree, ids, *, nb: int, bs: int):
     """Scatter the first ``nb`` blocks of a batch-1 dense cache into the
     pool blocks ``ids`` (traced; out-of-range entries dropped).  Cost is
-    O(nb * bs) regardless of pool size."""
+    O(nb * bs) regardless of pool size.  Quantized pools (entries carry
+    ``k_scale``/``v_scale`` sidecars — kernels/quant.py) quantize K/V
+    on the way in and scatter the scales into the same blocks."""
     def go(entry, stacked, name):
         src_e = one_tree["scan"][name] if stacked else one_tree[name]
-        out = {}
-        for leaf in ("k", "v", "pos", "seg"):
-            p, o = entry[leaf], src_e[leaf]
-            if stacked:                  # p: (U,N,bs,...), o: (U,1,S,...)
+        quantized = "k_scale" in entry
+
+        def blocks(o):
+            if stacked:                  # o: (U,1,S,...) -> (U,nb,bs,...)
                 src = o[:, 0, :nb * bs]
-                src = src.reshape(src.shape[0], nb, bs, *src.shape[2:])
-                out[leaf] = p.at[:, ids].set(src.astype(p.dtype))
-            else:                        # p: (N,bs,...), o: (1,S,...)
-                src = o[0, :nb * bs].reshape(nb, bs, *o.shape[2:])
-                out[leaf] = p.at[ids].set(src.astype(p.dtype))
+                return src.reshape(src.shape[0], nb, bs, *src.shape[2:])
+            return o[0, :nb * bs].reshape(nb, bs, *o.shape[2:])
+
+        def put(p, src):
+            if stacked:                  # p: (U,N,bs,...)
+                return p.at[:, ids].set(src.astype(p.dtype))
+            return p.at[ids].set(src.astype(p.dtype))
+
+        out = dict(entry)
+        for leaf in ("k", "v", "pos", "seg"):
+            src = blocks(src_e[leaf])
+            if quantized and leaf in ("k", "v"):
+                q, sc = quant.quantize(src, entry[leaf].dtype)
+                out[leaf] = put(entry[leaf], q)
+                out[leaf + "_scale"] = put(entry[leaf + "_scale"], sc)
+            else:
+                out[leaf] = put(entry[leaf], src)
         return out
     return _map_attn_entries(pool_tree, go)
 
@@ -239,14 +259,14 @@ def _blocks_invalidate(pool_tree, ids):
 
 
 def _blocks_copy(pool_tree, src, dst):
-    """Copy whole physical blocks ``src[i] -> dst[i]`` (all leaves, all
-    slots) — the copy-on-write materialisation.  Traced id vectors;
-    padding entries carry an out-of-range dst and are dropped by the
-    scatter (their src is clamped to a valid block by the gather)."""
+    """Copy whole physical blocks ``src[i] -> dst[i]`` (ALL leaves — K/V,
+    pos/seg, and any quantization scale sidecars — all slots) — the
+    copy-on-write materialisation.  Traced id vectors; padding entries
+    carry an out-of-range dst and are dropped by the scatter (their src
+    is clamped to a valid block by the gather)."""
     def go(entry, stacked, name):
         out = {}
-        for leaf in ("k", "v", "pos", "seg"):
-            p = entry[leaf]
+        for leaf, p in entry.items():
             if stacked:
                 out[leaf] = p.at[:, dst].set(p[:, src])
             else:
@@ -289,13 +309,16 @@ class PagedCachePool:
     """Block-table paged KV pool (module docstring has the full contract)."""
 
     def __init__(self, cfg, capacity: int, max_len: int,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 kv_dtype: str = "bf16"):
         bs = int(block_size)
         if bs <= 0:
             raise ValueError("block_size must be positive")
+        quant.storage_dtype(kv_dtype)                # validate the name
         self.cfg = cfg
         self.capacity = capacity
         self.block_size = bs
+        self.kv_dtype = kv_dtype
         self.blocks_per_row = max(1, math.ceil(max_len / bs))
         self.max_len = self.blocks_per_row * bs      # block-aligned
         if num_blocks is None:
@@ -303,7 +326,8 @@ class PagedCachePool:
         # floor: one full row must always fit (empty-pool admission of an
         # oversized request is unconditional — no deadlock)
         self.num_blocks = max(int(num_blocks), self.blocks_per_row)
-        self.cache = T.init_paged_cache(cfg, self.num_blocks, bs)
+        self.cache = T.init_paged_cache(cfg, self.num_blocks, bs,
+                                        kv_dtype=kv_dtype)
         self.lengths = np.zeros(capacity, np.int64)
         self.last_token = np.zeros(capacity, np.int64)
         self.row_of: Dict[int, int] = {}
@@ -345,6 +369,21 @@ class PagedCachePool:
         hi = min(int(self._nb[row]), math.ceil(max(int(end), 0) / bs))
         return any(self._ref[int(self._table[row, bi])] > 1
                    for bi in range(lo, hi))
+
+    def bytes_per_block(self) -> int:
+        """Physical bytes one block occupies across every layer's entry —
+        K/V at the storage dtype, pos/seg, and quantization scale
+        sidecars when present.  The currency for fixed-byte-budget
+        comparisons across ``kv_dtype`` settings (benchmarks/
+        bench_quant.py): at the same byte budget an int8 pool affords
+        roughly 2x the blocks of a bf16 one (4x vs float32)."""
+        total = sum(leaf.size * leaf.dtype.itemsize
+                    for leaf in jax.tree.leaves(self.cache))
+        return total // self.num_blocks
+
+    def bytes_per_token(self) -> int:
+        """Physical bytes of KV state per cached token (all layers)."""
+        return self.bytes_per_block() // self.block_size
 
     def blocks_needed(self, length: int) -> int:
         return min(self.blocks_per_row,

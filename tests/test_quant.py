@@ -1,0 +1,545 @@
+"""Quantized paged KV (ISSUE 8): round-trip error bounds for the
+``kernels/quant.py`` helpers, quantized-kernel vs dense-oracle agreement
+for all four paged attention kernels, CoW fork/cow_prepare/rename ledger
+invariants with scale sidecars riding along, engine-level behavior of
+``--kv-dtype`` (bf16 structural bit-identity, int8 fused==unfused,
+dense-fallback warning), and the autotune tune-key kv-dtype component
+with legacy/corrupt cache-key migration."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+from test_fused import _decode_setup
+from test_paged import _tree_verify_setup, _verify_setup
+from test_pool_properties import _cow_ledger_ok
+
+from repro.configs import registry
+from repro.core import spec_decode as sd
+from repro.core.selector import LBSS, SelectorConfig
+from repro.data.workloads import make_workload
+from repro.kernels import autotune, ops, quant, ref
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, SpinEngine
+from repro.serving.pool import PagedCachePool
+
+VOCAB = 256
+
+
+# ------------------------------------------------------ quantize helpers --
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), scale_pow=st.integers(-6, 6))
+def test_int8_roundtrip_error_bound(seed, scale_pow):
+    """Symmetric int8 round-trip error is at most half a quantization
+    step per element: |dq - x| <= scale / 2 = amax / 254."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((5, 4, 16)).astype(np.float32) * 2.0 ** scale_pow
+    q, sc = quant.quantize(jnp.asarray(x), jnp.int8)
+    assert q.dtype == jnp.int8 and sc.dtype == jnp.float32
+    assert sc.shape == x.shape[:-1]
+    dq = np.asarray(quant.dequantize(q, sc))
+    bound = np.asarray(sc)[..., None] * 0.5 + 1e-12
+    assert (np.abs(dq - x) <= bound).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fp8_roundtrip_error_bound(seed):
+    """e4m3 keeps 3 mantissa bits: relative error <= 2^-4 per element,
+    plus one subnormal half-step (2^-10 scale) near zero."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((5, 4, 16)).astype(np.float32)
+    q, sc = quant.quantize(jnp.asarray(x), jnp.float8_e4m3fn)
+    assert q.dtype == jnp.float8_e4m3fn
+    dq = np.asarray(quant.dequantize(q, sc))
+    bound = np.abs(x) * 2.0 ** -4 + np.asarray(sc)[..., None] * 2.0 ** -10 \
+        + 1e-12
+    assert (np.abs(dq - x) <= bound).all()
+
+
+@pytest.mark.parametrize("qdt", [jnp.int8, jnp.float8_e4m3fn])
+def test_roundtrip_error_bound_example(qdt):
+    """Example-based twin of the property tests above (runs in bare
+    environments where hypothesis is unavailable)."""
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((6, 4, 32)).astype(np.float32)
+    q, sc = quant.quantize(jnp.asarray(x), qdt)
+    dq = np.asarray(quant.dequantize(q, sc))
+    if qdt == jnp.int8:
+        bound = np.asarray(sc)[..., None] * 0.5 + 1e-12
+    else:
+        bound = np.abs(x) * 2.0 ** -4 + np.asarray(sc)[..., None] * 2.0 ** -10
+    assert (np.abs(dq - x) <= bound).all()
+
+
+@pytest.mark.parametrize("qdt", [jnp.int8, jnp.float8_e4m3fn])
+def test_all_zero_rows_quantize_exactly(qdt):
+    q, sc = quant.quantize(jnp.zeros((3, 2, 8)), qdt)
+    np.testing.assert_array_equal(np.asarray(sc), 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(quant.dequantize(q, sc)), 0.0)
+
+
+def test_kv_dtype_names_round_trip():
+    assert quant.storage_dtype("bf16") is None
+    assert quant.storage_dtype("int8") == jnp.int8
+    assert quant.storage_dtype("fp8") == jnp.float8_e4m3fn
+    assert quant.dtype_name(jnp.int8) == "int8"
+    assert quant.dtype_name(jnp.float8_e4m3fn) == "fp8"
+    assert quant.dtype_name(jnp.bfloat16) == "bf16"
+    assert quant.dtype_name(jnp.float32) == "bf16"
+    with pytest.raises(ValueError, match="kv_dtype"):
+        quant.storage_dtype("int4")
+
+
+# --------------------------------------------- kernels vs dense oracles --
+
+def _quantize_pools(kp, vp, qdt):
+    kq, ks = quant.quantize(kp, qdt)
+    vq, vs = quant.quantize(vp, qdt)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_paged_decode_quantized_matches_oracle(kv_dtype):
+    qdt = quant.storage_dtype(kv_dtype)
+    rng = np.random.default_rng(11)
+    N, bs, Kh, D, H, B = 8, 16, 4, 16, 8, 3
+    kp = jnp.asarray(rng.standard_normal((N, bs, Kh, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((N, bs, Kh, D)), jnp.float32)
+    kq, vq, ks, vs = _quantize_pools(kp, vp, qdt)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    bt = jnp.asarray([[0, 1, 2], [3, -1, -1], [4, 5, -1]], jnp.int32)
+    lens = jnp.asarray([40, 9, 20], jnp.int32)
+    out = ops.paged_decode_attention(q, kq, vq, bt, lens, ks, vs)
+    want = ref.paged_decode_ref(q, kq, vq, bt, lens, ks, vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-2)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+@pytest.mark.parametrize("bq", [128, 8])
+def test_paged_verify_quantized_matches_oracle(kv_dtype, bq):
+    qdt = quant.storage_dtype(kv_dtype)
+    lens, H, Kh, D, bs = [37, 61, 15], 4, 2, 16, 8
+    nb = sum(-(-L // bs) for L in lens) + 2
+    q, kp, vp, pseg, ppos, qs, qpos, ids, owner = _verify_setup(
+        lens, bs, nb, H, Kh, D, 3, seed=21)
+    kq, vq, ks, vs = _quantize_pools(kp, vp, qdt)
+    out = ops.paged_verify_attention(q, kq, vq, pseg, ppos, qs, qpos,
+                                     ids, owner, ks, vs, bq=bq)
+    want = ref.paged_verify_ref(q, kq, vq, pseg, ppos, qs, qpos, ids,
+                                owner, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-2)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+@pytest.mark.parametrize("bk,depth", [(0, 1), (8, 2)])
+def test_fused_decode_quantized_matches_oracle(kv_dtype, bk, depth):
+    qdt = quant.storage_dtype(kv_dtype)
+    q, kp, vp, pseg, ppos, qs, qpos, bt = _decode_setup(
+        [37, 120, 61], 16, 4, 2, 16, 4, seed=5, idle_rows=1)
+    kq, vq, ks, vs = _quantize_pools(kp, vp, qdt)
+    out = ops.fused_paged_decode(q, kq, vq, pseg, ppos, qs, qpos, bt,
+                                 ks, vs,
+                                 config=autotune.FusedConfig(bk=bk,
+                                                             depth=depth))
+    want = ref.paged_seq_decode_ref(q, kq, vq, pseg, ppos, qs, qpos, bt,
+                                    ks, vs)
+    np.testing.assert_allclose(np.asarray(out)[:3], np.asarray(want)[:3],
+                               atol=2e-5, rtol=1e-2)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_fused_verify_quantized_tree_matches_oracle(kv_dtype):
+    qdt = quant.storage_dtype(kv_dtype)
+    args = _tree_verify_setup([37, 61], [[2, 1], [3]], 16, 4, 2, 16,
+                              seed=9)
+    q, kp, vp, pseg, ppos, qs, qpos, ids, owner, anc, node = args
+    kq, vq, ks, vs = _quantize_pools(kp, vp, qdt)
+    out = ops.fused_paged_verify(
+        q, kq, vq, pseg, ppos, qs, qpos, ids, owner, anc, node, ks, vs,
+        config=autotune.FusedConfig(bq=8, bk=0, depth=2))
+    want = ref.paged_verify_ref(q, kq, vq, pseg, ppos, qs, qpos, ids,
+                                owner, anc, node, ks, vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fused_decode_quantized_property(seed):
+    rng = np.random.default_rng(seed)
+    lens = [int(rng.integers(1, 80))
+            for _ in range(int(rng.integers(1, 4)))]
+    bs = int(rng.choice([8, 16]))
+    Tn = int(rng.integers(1, 5))
+    q, kp, vp, pseg, ppos, qs, qpos, bt = _decode_setup(
+        lens, bs, 4, 2, 16, Tn, seed=seed)
+    qdt = quant.storage_dtype(str(rng.choice(["int8", "fp8"])))
+    kq, vq, ks, vs = _quantize_pools(kp, vp, qdt)
+    cfg = autotune.FusedConfig(bk=int(rng.choice([0, bs // 2])),
+                               depth=int(rng.integers(1, 3)))
+    out = ops.fused_paged_decode(q, kq, vq, pseg, ppos, qs, qpos, bt,
+                                 ks, vs, config=cfg)
+    want = ref.paged_seq_decode_ref(q, kq, vq, pseg, ppos, qs, qpos, bt,
+                                    ks, vs)
+    live = len(lens)
+    np.testing.assert_allclose(np.asarray(out)[:live],
+                               np.asarray(want)[:live],
+                               atol=2e-5, rtol=1e-2)
+
+
+# -------------------------------------------------- pool scale sidecars --
+
+def _pool(kv_dtype, capacity=4, max_len=64, bs=8, num_blocks=None):
+    cfg = registry.reduced_for("llama-68m", d_model=32, n_heads=4,
+                               n_kv_heads=4, vocab_size=64, n_layers=1)
+    return PagedCachePool(cfg, capacity, max_len, bs,
+                          num_blocks=num_blocks, kv_dtype=kv_dtype)
+
+
+def _one_cache(pool, length, seed=0):
+    S = pool.prefill_len(max(16, length))
+    cache = T.init_cache(pool.cfg, 1, S)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, leaf in enumerate(jax.tree.leaves(cache)):
+        if leaf.ndim >= 4 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            leaf = jax.random.normal(jax.random.fold_in(key, i),
+                                     leaf.shape, leaf.dtype)
+        out.append(leaf)
+    return jax.tree.unflatten(jax.tree.structure(cache), out)
+
+
+def test_bf16_pool_tree_is_structurally_unquantized():
+    """The by-construction bit-identity witness: ``kv_dtype='bf16'``
+    produces the exact pre-quantization cache tree — same leaves, same
+    shapes, same dtypes, no scale sidecars anywhere — so every PR-7 code
+    path runs unchanged."""
+    pool = _pool("bf16")
+    plain = T.init_paged_cache(pool.cfg, pool.num_blocks, pool.block_size)
+    assert jax.tree.structure(pool.cache) == jax.tree.structure(plain)
+    for a, b in zip(jax.tree.leaves(pool.cache), jax.tree.leaves(plain)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    flat = jax.tree_util.tree_leaves_with_path(pool.cache)
+    assert not any("scale" in jax.tree_util.keystr(p) for p, _ in flat)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quantized_pool_has_scale_sidecars(kv_dtype):
+    pool = _pool(kv_dtype)
+    qdt = quant.storage_dtype(kv_dtype)
+    leaves = jax.tree_util.tree_leaves_with_path(pool.cache)
+    kv = [(p, x) for p, x in leaves
+          if jax.tree_util.keystr(p).endswith("['k']")
+          or jax.tree_util.keystr(p).endswith("['v']")]
+    sc = [(p, x) for p, x in leaves if "scale" in jax.tree_util.keystr(p)]
+    assert kv and sc and len(sc) == len(kv)
+    for _, x in kv:
+        assert x.dtype == qdt
+    for _, x in sc:
+        assert x.dtype == jnp.float32
+        assert x.shape[-3:] == (pool.num_blocks, pool.block_size,
+                                pool.cfg.n_kv_heads) or \
+            x.shape == (pool.num_blocks, pool.block_size,
+                        pool.cfg.n_kv_heads)
+    assert pool.bytes_per_block() < _pool("bf16").bytes_per_block()
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_insert_quantizes_on_write(kv_dtype):
+    """Admission scatters quantized blocks + scales such that dequant
+    recovers the prefilled K/V within the round-trip bound — and never
+    stores a dequantized copy (pool K/V leaves stay int8/fp8)."""
+    pool = _pool(kv_dtype, bs=8)
+    L = 20
+    one = _one_cache(pool, L, seed=3)
+    pool.insert(0, one, L, 1)
+    row = pool.row_of[0]
+    nb = int(pool._nb[row])
+    blocks = [int(b) for b in pool._table[row, :nb]]
+    flat = {jax.tree_util.keystr(p): x
+            for p, x in jax.tree_util.tree_leaves_with_path(pool.cache)}
+    src_flat = {jax.tree_util.keystr(p): x
+                for p, x in jax.tree_util.tree_leaves_with_path(one)}
+    checked = 0
+    for ks, leaf in flat.items():
+        if not (ks.endswith("['k']") or ks.endswith("['v']")):
+            continue
+        assert leaf.dtype == quant.storage_dtype(kv_dtype)
+        scale = flat[ks[:-2] + "_scale']"]
+        # leading axis = scanned layer stack; then (N, bs, Kh, D)
+        dq = np.asarray(quant.dequantize(leaf, scale))
+        got = dq[:, blocks].reshape(
+            dq.shape[0], nb * pool.block_size, *leaf.shape[3:])[:, :L]
+        want = np.asarray(src_flat[ks], np.float32)[:, 0, :L]
+        amax = np.abs(want).max()
+        assert np.abs(got - want).max() <= amax * 0.07 + 1e-6
+        checked += 1
+    assert checked >= 2                       # at least one k and one v
+
+
+def _scales_of(pool, blocks):
+    flat = jax.tree_util.tree_leaves_with_path(pool.cache)
+    return {ks: np.asarray(x)[..., blocks, :, :]
+            for ks, x in ((jax.tree_util.keystr(p), x) for p, x in flat)
+            if "scale" in ks}
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_cow_fork_carries_scale_sidecars(kv_dtype):
+    """fork -> cow_prepare must whole-block-copy the scale sidecars with
+    the K/V payload (a dequant through a stale scale silently corrupts
+    the branch), under the same refcount ledger as the data blocks."""
+    pool = _pool(kv_dtype, bs=8, max_len=64)
+    L = 20                                        # straddles 3 blocks
+    pool.insert(0, _one_cache(pool, L, seed=5), L, 1)
+    row = pool.row_of[0]
+    nb = int(pool._nb[row])
+    src_blocks = [int(b) for b in pool._table[row, :nb]]
+    before = _scales_of(pool, src_blocks)
+
+    pool.fork(0, "b1")
+    assert pool.ref_count(0, 0) == 2              # aliased, nothing moved
+    _cow_ledger_ok(pool)
+    copied = pool.cow_prepare("b1", 0, L)
+    assert copied == nb
+    _cow_ledger_ok(pool)
+    brow = pool.row_of["b1"]
+    new_blocks = [int(b) for b in pool._table[brow, :nb]]
+    assert set(new_blocks).isdisjoint(src_blocks)
+    after = _scales_of(pool, new_blocks)
+    for ks in before:
+        np.testing.assert_array_equal(before[ks], after[ks])
+
+    # rename keeps the ledger untouched; evict returns blocks + sidecar
+    # slots to the free list exactly once
+    pool.evict(0)
+    pool.rename("b1", 0)
+    _cow_ledger_ok(pool)
+    assert pool.allocated_blocks == nb
+    pool.evict(0)
+    _cow_ledger_ok(pool)
+    assert pool.free_blocks == pool.num_blocks
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops_list=st.lists(
+    st.tuples(st.sampled_from(["admit", "evict", "fork", "cow", "rename"]),
+              st.integers(0, 5), st.integers(1, 40)),
+    min_size=1, max_size=25))
+def test_quantized_pool_ledger_never_leaks(ops_list):
+    """The PR-6 block-accounting property test, re-run on an int8 pool:
+    scale sidecars ride the same alloc/copy/free paths and must never
+    unbalance ``free + allocated == num_blocks``."""
+    pool = _pool("int8")
+    forks = set()
+    for op, rid, length in ops_list:
+        if op == "admit" and not pool.has(rid) and pool.can_admit(length):
+            pool.insert(rid, _one_cache(pool, length), length, 0)
+        elif op == "evict" and pool.has(rid):
+            pool.evict(rid)
+            forks.discard(rid)
+        elif op == "fork" and pool.has(rid) and not pool.has(("f", rid)) \
+                and pool.free_rows > 0:
+            pool.fork(rid, ("f", rid))
+            forks.add(("f", rid))
+        elif op == "cow" and pool.has(("f", rid)) \
+                and pool.free_blocks >= int(pool._nb[pool.row_of[("f", rid)]]):
+            pool.cow_prepare(("f", rid), 0, length)
+        elif op == "rename" and pool.has(("f", rid)) and pool.has(rid):
+            pool.evict(rid)
+            pool.rename(("f", rid), rid)
+            forks.discard(("f", rid))
+        _cow_ledger_ok(pool)
+    for rid in list(pool.row_of):
+        pool.evict(rid)
+    assert pool.free_blocks == pool.num_blocks
+
+
+# ----------------------------------------------------- engine behavior ----
+
+@pytest.fixture(scope="module")
+def models():
+    key = jax.random.PRNGKey(0)
+    cfg_llm = registry.reduced_for("llama-7b", d_model=96, n_heads=4,
+                                   n_kv_heads=4, vocab_size=VOCAB)
+    llm = sd.Bundle(cfg_llm, T.init_params(cfg_llm, key))
+    ssms = []
+    for i, (d, L) in enumerate([(32, 1), (64, 2)]):
+        c = registry.reduced_for("llama-68m", d_model=d, n_heads=4,
+                                 n_kv_heads=4, vocab_size=VOCAB, n_layers=L)
+        ssms.append(sd.Bundle(c, T.init_params(c, jax.random.PRNGKey(i + 1))))
+    return llm, ssms
+
+
+def _run(llm, ssms, **kw):
+    sel = LBSS(SelectorConfig(n_ssms=2, batch_limits=[4, 4], alpha=4,
+                              beta=2, seed=1))
+    defaults = dict(gamma=3, max_len=128, capacity=4, packed_bucket=128,
+                    straggler_mitigation=False)
+    defaults.update(kw)
+    eng = SpinEngine(llm, ssms, sel, EngineConfig(**defaults))
+    reqs = make_workload("mix", 4, VOCAB, seed=3, scale=0.2)
+    eng.add_requests(reqs)
+    eng.run(max_slots=120)
+    assert all(r.done for r in eng.requests.values()), "stream must drain"
+    return eng
+
+
+def _same_trace(a, b):
+    for rid in a.requests:
+        assert a.requests[rid].emitted == b.requests[rid].emitted, rid
+    assert a.accepted_tokens == b.accepted_tokens
+    assert a.sim_time == b.sim_time, (a.sim_time, b.sim_time)
+    sa, sb = a.stats(), b.stats()
+    for key in ("drafted", "goodput_sim", "p95_latency"):
+        assert sa[key] == sb[key], key
+
+
+@pytest.mark.parametrize("shape", ["linear", "tree"])
+def test_int8_engine_fused_bit_identical_to_unfused(models, shape):
+    """Both dequant implementations — in-kernel (fused Pallas) and
+    post-gather (XLA fallback) — must commit the same tokens on the same
+    sim clock, linear and tree."""
+    llm, ssms = models
+    off = _run(llm, ssms, kv_dtype="int8", spec_shape=shape,
+               fused_kernels="off")
+    on = _run(llm, ssms, kv_dtype="int8", spec_shape=shape,
+              fused_kernels="on")
+    assert on.stats()["kv_dtype"] == "int8"
+    _same_trace(off, on)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quantized_engine_drains_and_accepts(models, kv_dtype):
+    """Quantized KV is a capacity knob, not a correctness knob: the
+    stream drains, speculation still accepts at a healthy rate, and the
+    total committed tokens match bf16 (greedy emission re-derives every
+    token through the LLM, so output length is workload-determined)."""
+    llm, ssms = models
+    base = _run(llm, ssms)
+    e = _run(llm, ssms, kv_dtype=kv_dtype)
+    assert e.stats()["kv_dtype"] == kv_dtype
+    assert e.accepted_tokens > 0
+    # quantization noise may flip individual accept/reject outcomes but
+    # must not collapse the acceptance rate
+    assert abs(e.accepted_tokens - base.accepted_tokens) \
+        <= 0.25 * base.accepted_tokens
+    for rid, r in e.requests.items():
+        assert len(r.emitted) == len(base.requests[rid].emitted)
+
+
+def test_kv_dtype_dense_fallback_warns(models):
+    llm, ssms = models
+    sel = LBSS(SelectorConfig(n_ssms=2, batch_limits=[4, 4], alpha=4,
+                              beta=2, seed=1))
+    with pytest.warns(UserWarning, match="kv_dtype"):
+        eng = SpinEngine(llm, ssms, sel, EngineConfig(
+            gamma=3, max_len=128, capacity=4, kv_layout="dense",
+            kv_dtype="int8"))
+    assert eng.kv_dtype == "bf16"
+    assert eng.stats()["kv_dtype"] == "bf16"
+
+
+def test_engine_rejects_unknown_kv_dtype(models):
+    llm, ssms = models
+    sel = LBSS(SelectorConfig(n_ssms=2, batch_limits=[4, 4], alpha=4,
+                              beta=2, seed=1))
+    with pytest.raises(ValueError, match="kv_dtype"):
+        SpinEngine(llm, ssms, sel, EngineConfig(
+            gamma=3, max_len=128, capacity=4, kv_dtype="int4"))
+
+
+# ------------------------------------------------ autotune key migration --
+
+def test_tune_key_has_kv_dtype_component():
+    k1 = autotune.tune_key("verify", H=4, Kh=4, D=16, gamma_max=8,
+                           block_size=16)
+    k2 = autotune.tune_key("verify", H=4, Kh=4, D=16, gamma_max=8,
+                           block_size=16, kv_dtype="int8")
+    assert "|kvbf16|" in k1 and "|kvint8|" in k2 and k1 != k2
+
+
+def test_load_cache_migrates_legacy_and_drops_corrupt(tmp_path):
+    """Pre-kv-dtype keys (the committed results/TUNE_cache.json format)
+    migrate to ``kvbf16``; malformed keys are dropped; a current-format
+    key wins over a legacy key migrating onto the same slot."""
+    backend = jax.default_backend()
+    legacy = f"decode|H4xKh4xD16|g8|bs16|linear|{backend}"
+    modern = f"decode|H4xKh4xD16|g8|bs16|linear|kvbf16|{backend}"
+    other = f"verify|H4xKh4xD16|g8|bs16|tree|{backend}"
+    path = str(tmp_path / "tune.json")
+    with open(path, "w") as f:
+        json.dump({
+            legacy: {"bq": 32, "bk": 0, "depth": 1},
+            modern: {"bq": 128, "bk": 8, "depth": 2},
+            other: {"bq": 64, "bk": 0, "depth": 1},
+            "garbage key": {"bq": 1},
+            "decode|oops|g8|bs16|linear|cpu": {"bq": 2},
+            f"decode|H4xKh4xD16|g8|bs16|linear|kvint8|{backend}":
+                {"bq": 16, "bk": 8, "depth": 1},
+        }, f)
+    cache = autotune.load_cache(path)
+    # modern entry beat the legacy migration of the same geometry
+    assert cache[modern] == {"bq": 128, "bk": 8, "depth": 2}
+    assert cache[f"verify|H4xKh4xD16|g8|bs16|tree|kvbf16|{backend}"] \
+        == {"bq": 64, "bk": 0, "depth": 1}
+    assert not any("garbage" in k or "oops" in k for k in cache)
+    # per-dtype entries stay distinct
+    got_bf16 = autotune.get_config("decode", H=4, Kh=4, D=16, gamma_max=8,
+                                   block_size=16, path=path)
+    got_int8 = autotune.get_config("decode", H=4, Kh=4, D=16, gamma_max=8,
+                                   block_size=16, kv_dtype="int8",
+                                   path=path)
+    assert got_bf16 == autotune.FusedConfig(bq=128, bk=8, depth=2)
+    assert got_int8 == autotune.FusedConfig(bq=16, bk=8, depth=1)
+
+
+def test_committed_tune_cache_loads_clean():
+    """Every key in a populated results/TUNE_cache.json must survive the
+    migration (none dropped as corrupt).  The cache is machine-local
+    (gitignored) — skip when this checkout has never tuned."""
+    try:
+        with open(autotune.CACHE_PATH) as f:
+            raw = json.load(f)
+    except OSError:
+        pytest.skip("no local tune cache")
+    cache = autotune.load_cache()
+    assert len(cache) == len(raw)
+    assert all("|kv" in k for k in cache)
+
+
+def test_roofline_candidates_widen_grid(tmp_path):
+    """Roofline-derived tile points: a memory-dominant dry-run record
+    adds deeper-prefetch configs; a missing file adds nothing."""
+    assert autotune.roofline_candidates(
+        "decode", 16, path=str(tmp_path / "absent.json")) == []
+    path = str(tmp_path / "dryrun.json")
+    with open(path, "w") as f:
+        json.dump([
+            {"status": "ok", "roofline": {"dominant": "memory",
+                                          "t_compute_s": 1.0,
+                                          "t_memory_s": 2.0,
+                                          "t_collective_s": 0.1}},
+            {"status": "ok", "roofline": {"dominant": "compute",
+                                          "t_compute_s": 2.0,
+                                          "t_memory_s": 1.0,
+                                          "t_collective_s": 0.1}},
+        ], f)
+    extra = autotune.roofline_candidates("verify", 32, path=path)
+    assert autotune.FusedConfig(bq=128, bk=8, depth=3) in extra
+    assert autotune.FusedConfig(bq=256, bk=0, depth=1) in extra
+    base = autotune.candidate_configs("verify", 32)
+    widened = autotune.candidate_configs("verify", 32, roofline_path=path)
+    assert set(base) < set(widened)
+    # every widened candidate must actually run (guard against a derived
+    # config the kernels reject)
+    for cfg in extra:
+        assert cfg.depth >= 1 and cfg.bq >= 1 and cfg.bk >= 0
