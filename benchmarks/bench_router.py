@@ -9,10 +9,13 @@ instead of one.  Aggregate goodput is total accepted tokens over the
 figure: a replica finishing early stops contributing.
 
 Acceptance (ISSUE 5): 2 replicas must reach >= 1.7x the single-engine
-aggregate goodput on this workload.  The second half compares the two
-dispatch policies (least-outstanding-tokens vs power-of-two-choices on
-free KV blocks) on the same stream, reporting per-replica dispatch
-balance alongside goodput.
+aggregate goodput on this workload.  The second half compares the three
+dispatch policies (least-outstanding-tokens, power-of-two-choices on
+free KV blocks, most-SLO-headroom) on the same stream stamped with the
+mixed strict/lax ``interactive`` SLO profile, reporting
+**goodput-under-SLO** and deadline attainment — the headline serving
+metric since ISSUE 9 — alongside dispatch balance (the scaling sweep
+stays unstamped, so its gate is unchanged from ISSUE 5).
 
 Uses the untrained reduced zoo (scheduling, not acceptance quality, is
 under test); model weights and jit caches are shared across replicas, so
@@ -67,8 +70,17 @@ def _engines(llm, ssms, n_replicas):
     return engines
 
 
-def _run(llm, ssms, n_replicas, policy):
-    reqs = make_workload("mix", N_REQ, VOCAB, seed=SEED, scale=0.25, arrival_rate=RATE)
+def _run(llm, ssms, n_replicas, policy, slo_profile="off"):
+    reqs = make_workload(
+        "mix",
+        N_REQ,
+        VOCAB,
+        seed=SEED,
+        scale=0.25,
+        arrival_rate=RATE,
+        slo_profile=slo_profile,
+        slo_scale=2.0,
+    )
     router = Router(
         _engines(llm, ssms, n_replicas), RouterConfig(policy=policy, seed=SEED)
     )
@@ -86,13 +98,11 @@ def main(emit):
 
     # -- replica scaling at fixed aggregate (rows, KV cells) budget ------
     goodput = {}
-    sweep = {}  # n -> (stats, us): the lot policy record reuses n=2
     for n in (1, 2, 4):
         t0 = time.perf_counter()
         st = _run(llm, ssms, n, "lot")
         us = (time.perf_counter() - t0) * 1e6
         goodput[n] = st["aggregate_goodput_sim"]
-        sweep[n] = (st, us)
         emit(
             f"router[replicas={n}]",
             us,
@@ -116,22 +126,22 @@ def main(emit):
             f"{goodput[1]:.1f} tok/s ({goodput[2] / goodput[1]:.2f}x)"
         )
 
-    # -- dispatch-policy comparison on the same saturating stream --------
-    for policy in ("lot", "p2c"):
-        if policy == "lot":
-            # identical (deterministic) configuration to the sweep's n=2
-            # run above — reuse it instead of re-running ~6 s of engine
-            st, us = sweep[2]
-        else:
-            t0 = time.perf_counter()
-            st = _run(llm, ssms, 2, policy)
-            us = (time.perf_counter() - t0) * 1e6
+    # -- dispatch-policy comparison on the SLO-stamped stream ------------
+    # Same arrivals/tokens as the sweep, now carrying mixed strict/lax
+    # contracts (``interactive`` profile): the headline per policy is
+    # goodput-under-SLO, not raw goodput.
+    for policy in ("lot", "p2c", "slo"):
+        t0 = time.perf_counter()
+        st = _run(llm, ssms, 2, policy, slo_profile="interactive")
+        us = (time.perf_counter() - t0) * 1e6
         counts = st["dispatched"]
         imbalance = max(counts) - min(counts)
         occ = [f"{x:.2f}" for x in st["peak_kv_occupancy"]]
         emit(
             f"router_policy[{policy}]",
             us,
+            f"goodput_under_slo={st['slo']['goodput_under_slo']:.1f}tok/s "
+            f"attainment={st['slo']['attainment']:.3f} "
             f"goodput={st['aggregate_goodput_sim']:.1f}tok/s "
             f"dispatch={'/'.join(map(str, counts))} "
             f"imbalance={imbalance} "

@@ -28,7 +28,7 @@ from the current run *for a section the current run claims to have run*
 Refreshing the baseline after an intentional perf change::
 
     PYTHONPATH=src python -m benchmarks.run \
-        --sections serving,paged,kernels,chunked,gamma,tree,router,quant \
+        --sections serving,paged,kernels,chunked,gamma,tree,router,quant,slo \
         --json-path results/BENCH_baseline.json
 """
 
@@ -47,6 +47,7 @@ _NUM = re.compile(r"([A-Za-z_][\w.]*)=(-?\d+(?:\.\d+)?(?:e-?\d+)?)")
 LOWER_BETTER = ("ttft", "stall", "latency", "lat", "wait", "us", "preempt")
 HIGHER_BETTER = (
     "goodput",
+    "attainment",
     "speedup",
     "reduction",
     "saving",

@@ -37,7 +37,8 @@ def main(argv=None) -> None:
                             bench_heterogeneity, bench_kernels, bench_overall,
                             bench_paged, bench_pipeline, bench_quant,
                             bench_router, bench_selector, bench_serving,
-                            bench_tree, bench_verification, roofline)
+                            bench_slo, bench_tree, bench_verification,
+                            roofline)
 
     records = []
     section_name = [""]
@@ -64,6 +65,7 @@ def main(argv=None) -> None:
         ("tree speculation", bench_tree.main),
         ("quant kv", bench_quant.main),
         ("router replicas", bench_router.main),
+        ("slo goodput", bench_slo.main),
         ("roofline", roofline.main),
     ]
     if args.sections:

@@ -34,6 +34,15 @@ decode-active request each slot:
   ingestion.  Every request keeps at least depth 1 (the slot still
   commits ≥ 1 token per request).
 
+* **deadline-headroom cap** — when a request carries an SLO (the
+  engine passes per-request seconds-to-deadline via ``slo_slack``),
+  deep speculation is only granted if the TPOT slack affords a *failed*
+  verify: a depth-``k`` iteration whose drafts all get rejected still
+  pays ``iteration_time(ssm, k)`` to commit one token, so the depth is
+  trimmed to the largest ``k`` whose iteration time fits the slack
+  (floor 1).  SpecServe/AdaSpec condition depth on exactly this term;
+  deadline-free requests are untouched.
+
 The ``fixed`` policy returns ``cfg.gamma`` for every request
 unconditionally and is bit-identical to the pre-controller engine.
 
@@ -121,6 +130,7 @@ class GammaController:
         self.grants = 0  # total per-request grants issued
         self.depth_sum = 0  # sum of granted depths (mean = sum/grants)
         self.capped = 0  # grants trimmed by the load-aware cap
+        self.slo_capped = 0  # grants trimmed by the deadline-headroom cap
         self.depth_hist: Dict[int, int] = {}  # depth -> grant count
         self._best: Dict[tuple, int] = {}  # (ssm, quantized a) -> depth
 
@@ -181,15 +191,19 @@ class GammaController:
         *,
         token_budget: Optional[int] = None,
         reserved_tokens: int = 0,
+        slo_slack: Optional[Mapping[int, float]] = None,
     ) -> Dict[int, int]:
         """Depths for this slot's decode-active requests.  ``assign`` maps
         request -> SSM (the selector's placement this slot);
         ``reserved_tokens`` is the budget already committed to this
-        slot's prefill chunk grants."""
+        slot's prefill chunk grants; ``slo_slack`` maps request ->
+        seconds until its next-token deadline (only SLO-carrying
+        requests appear — absent/None means no deadline pressure)."""
         if self.cfg.policy == "fixed":
             depths = {rid: self.cfg.gamma for rid in ids}
         else:
             depths = {rid: self._depth_for(rid, assign.get(rid, 0)) for rid in ids}
+            self._apply_slo_cap(depths, assign, slo_slack)
             self._apply_budget_cap(depths, token_budget, reserved_tokens)
         for rid, k in depths.items():
             self.granted[rid] = k
@@ -197,6 +211,38 @@ class GammaController:
             self.depth_sum += k
             self.depth_hist[k] = self.depth_hist.get(k, 0) + 1
         return depths
+
+    def _apply_slo_cap(
+        self,
+        depths: Dict[int, int],
+        assign: Mapping[int, int],
+        slo_slack: Optional[Mapping[int, float]],
+    ) -> None:
+        """Deadline-headroom cap (SpecServe/AdaSpec): a deep grant is only
+        worth its KV + verify cost if the request's TPOT slack affords
+        the *whole* draft+verify iteration — when drafts get rejected, a
+        depth-k iteration still pays ``iteration_time(ssm, k)`` to commit
+        one token, so a request close to its deadline must speculate
+        shallow.  Trims each SLO-carrying request's depth to the largest
+        ``k`` whose iteration time fits its slack; depth 1 is the floor
+        (the request still needs a verify launch to make progress at
+        all, and a late token beats no token)."""
+        if not slo_slack:
+            return
+        for rid, k in depths.items():
+            slack = slo_slack.get(rid)
+            if slack is None or slack <= 0 or k <= 1:
+                # no contract, or already past the deadline — a late
+                # request gains nothing from shallow grants (the next
+                # token cannot meet its deadline either way), so it keeps
+                # the throughput-optimal depth to catch up fastest
+                continue
+            ssm = assign.get(rid, 0)
+            while k > 1 and self.iteration_time(ssm, k) > slack:
+                k -= 1
+            if k < depths[rid]:
+                self.slo_capped += depths[rid] - k
+                depths[rid] = k
 
     def _apply_budget_cap(
         self,
@@ -239,5 +285,6 @@ class GammaController:
             "grants": self.grants,
             "mean_depth": self.depth_sum / self.grants if self.grants else 0.0,
             "capped": self.capped,
+            "slo_capped": self.slo_capped,
             "depth_hist": dict(sorted(self.depth_hist.items())),
         }

@@ -11,6 +11,7 @@ how predictable the continuation is (see data/pipeline.py).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -37,6 +38,83 @@ DATASETS: Dict[str, Dataset] = {
 }
 
 
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request latency contract (SpecServe/AdaSpec-style serving).
+
+    ``ttft_deadline`` is the seconds-from-arrival budget for the FIRST
+    output token; every subsequent token is due ``tpot_target`` seconds
+    after the previous one's deadline, so token ``j`` (0-indexed) of a
+    request is due at ``arrival + ttft_deadline + j * tpot_target`` on
+    the sim clock.  Frozen on purpose: the contract is immutable once a
+    request enters the system — schedulers read it, nothing rewrites it.
+    """
+    ttft_deadline: float       # seconds from arrival to first token
+    tpot_target: float         # seconds per subsequent token
+
+    def __post_init__(self):
+        if self.ttft_deadline <= 0 or self.tpot_target <= 0:
+            raise ValueError("SLO deadlines must be positive "
+                             f"(got {self!r})")
+
+    def token_deadline(self, arrival: float, j: int) -> float:
+        """Absolute sim-clock deadline of output token ``j`` (0-indexed)."""
+        return arrival + self.ttft_deadline + j * self.tpot_target
+
+
+# Per-class SLO profiles: a profile maps each dataset class to the
+# contract its traffic buys.  Values are sim-clock seconds sized for the
+# reduced CPU zoo (single-engine service runs at roughly 300 tok/s with
+# TTFTs in the tens of milliseconds — see results/BENCH_baseline.json);
+# ``assign_slos(scale=)`` rescales everything for other regimes.
+# "interactive" marks chat-shaped traffic (cp) strict and batch-shaped
+# traffic (alpaca) lax — the mixed strict/lax workload the SLO benchmarks
+# serve; "strict"/"lax" apply one contract uniformly.
+SLO_PROFILES: Dict[str, Dict[str, SLO]] = {
+    "strict": {
+        "alpaca": SLO(ttft_deadline=0.050, tpot_target=0.006),
+        "cp": SLO(ttft_deadline=0.050, tpot_target=0.006),
+        "cip": SLO(ttft_deadline=0.050, tpot_target=0.006),
+    },
+    "lax": {
+        "alpaca": SLO(ttft_deadline=1.0, tpot_target=0.060),
+        "cp": SLO(ttft_deadline=1.0, tpot_target=0.060),
+        "cip": SLO(ttft_deadline=1.0, tpot_target=0.060),
+    },
+    "interactive": {
+        "alpaca": SLO(ttft_deadline=1.0, tpot_target=0.060),
+        "cp": SLO(ttft_deadline=0.050, tpot_target=0.006),
+        "cip": SLO(ttft_deadline=0.150, tpot_target=0.015),
+    },
+}
+
+
+def assign_slos(reqs: List["Request"], profile: str, *,
+                scale: float = 1.0) -> List["Request"]:
+    """Stamp per-class SLO contracts onto requests, in place.
+
+    ``profile`` is a key of :data:`SLO_PROFILES` or ``"off"`` (stamp
+    nothing — every request keeps ``slo=None`` and the serving stack is
+    bit-identical to deadline-blind operation).  ``scale`` multiplies
+    every deadline, so one profile serves differently-calibrated cost
+    models."""
+    if profile == "off":
+        return reqs
+    try:
+        classes = SLO_PROFILES[profile]
+    except KeyError:
+        raise ValueError(
+            f"unknown SLO profile {profile!r} (expected 'off' or one of "
+            f"{'/'.join(sorted(SLO_PROFILES))})") from None
+    if scale <= 0:
+        raise ValueError("SLO scale must be positive")
+    for r in reqs:
+        base = classes[r.dataset]
+        r.slo = SLO(ttft_deadline=base.ttft_deadline * scale,
+                    tpot_target=base.tpot_target * scale)
+    return reqs
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -48,6 +126,10 @@ class Request:
     # scheduling class: lower value = more urgent (nice-level semantics).
     # The default 0 everywhere reproduces plain FIFO-by-arrival exactly.
     priority: int = 0
+    # latency contract (None = no deadline: the scheduler, gamma
+    # controller and router treat the request exactly as before SLOs
+    # existed — the `--slo-profile off` bit-identity contract)
+    slo: Optional[SLO] = None
     # runtime state
     emitted: Optional[List[int]] = None
     done: bool = False
@@ -59,6 +141,10 @@ class Request:
     prefill_pos: int = 0
     # sim-clock time the first output token was committed (TTFT source)
     first_token_time: Optional[float] = None
+    # sim-clock commit time of every emitted token (parallel to
+    # ``emitted``), the deadline-attainment source: token j met its SLO
+    # iff token_times[j] <= slo.token_deadline(arrival, j)
+    token_times: Optional[List[float]] = None
 
     @property
     def prompt_len(self) -> int:
@@ -70,6 +156,15 @@ class Request:
         if self.finish_time is None:
             return None
         return self.finish_time - self.arrival
+
+    def next_deadline(self) -> float:
+        """Absolute sim-clock deadline of the NEXT token this request
+        owes (its TTFT deadline until the first token commits, then the
+        running TPOT schedule); +inf without an SLO, so deadline-sorted
+        orderings degrade to the deadline-free ranking exactly."""
+        if self.slo is None:
+            return math.inf
+        return self.slo.token_deadline(self.arrival, len(self.emitted or []))
 
 
 def poisson_arrivals(n: int, rate: float, seed: int = 0,
@@ -110,12 +205,15 @@ def assign_arrivals(reqs: List[Request], *, rate: Optional[float] = None,
 def make_workload(name: str, n_requests: int, vocab: int, seed: int = 0,
                   scale: float = 1.0,
                   arrival_rate: Optional[float] = None,
-                  arrival_trace: Optional[np.ndarray] = None
-                  ) -> List[Request]:
+                  arrival_trace: Optional[np.ndarray] = None,
+                  slo_profile: str = "off",
+                  slo_scale: float = 1.0) -> List[Request]:
     """name in {alpaca, cp, cip, mix}.  ``scale`` shrinks lengths for CPU
     tests.  ``arrival_rate`` (Poisson, req/s) or ``arrival_trace``
     (explicit timestamps) stamp streaming arrival times for the
-    continuous-batching scheduler; default is everything-at-t=0."""
+    continuous-batching scheduler; default is everything-at-t=0.
+    ``slo_profile`` stamps per-class latency contracts (see
+    :func:`assign_slos`); the default ``"off"`` stamps none."""
     rng = np.random.default_rng(seed)
     table = _backbone(np.random.default_rng(seed ^ 0x5EED), vocab)
     if name == "mix":
@@ -136,4 +234,5 @@ def make_workload(name: str, n_requests: int, vocab: int, seed: int = 0,
     if arrival_rate is not None or arrival_trace is not None:
         assign_arrivals(out, rate=arrival_rate, trace=arrival_trace,
                         seed=seed ^ 0xA55)
+    assign_slos(out, slo_profile, scale=slo_scale)
     return out

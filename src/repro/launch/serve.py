@@ -26,6 +26,7 @@ sync — see tools/check_docs.py).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import jax
@@ -179,29 +180,43 @@ def build_parser() -> argparse.ArgumentParser:
                          "(serving/router.py); --capacity and --kv-budget "
                          "are aggregate and split evenly across replicas")
     ap.add_argument("--router-policy", default=None,
-                    choices=["lot", "p2c"],
+                    choices=["lot", "p2c", "slo"],
                     help="replica dispatch policy: lot = least outstanding "
                          "tokens (default), p2c = power-of-two-choices on "
-                         "free KV blocks; passing this flag routes even a "
+                         "free KV blocks, slo = most cluster-level SLO "
+                         "headroom (deadline slack net of backlog drain "
+                         "time); passing this flag routes even a "
                          "single replica through the router (bit-identical "
                          "to the bare engine)")
+    ap.add_argument("--slo-profile", default="off",
+                    choices=["off", "strict", "lax", "interactive"],
+                    help="stamp per-class SLO contracts "
+                         "(TTFT deadline + per-token target, "
+                         "data/workloads.py SLO_PROFILES) onto the "
+                         "workload and make admission order, prefill "
+                         "chunk sizing, adaptive speculation depth and "
+                         "slo routing deadline-aware; off (default) "
+                         "stamps nothing and is bit-identical to the "
+                         "deadline-blind engine")
+    ap.add_argument("--slo-scale", type=float, default=1.0,
+                    help="multiply every --slo-profile deadline (>1 lax, "
+                         "<1 strict) — one profile serves "
+                         "differently-calibrated cost models")
     return ap
 
 
 def main(argv=None):
     ap = build_parser()
     args = ap.parse_args(argv)
-    if args.block_size <= 0:
-        ap.error("--block-size must be positive")
-    if args.prefill_chunk < 0:
-        ap.error("--prefill-chunk must be >= 0 (0 disables chunking)")
-    if args.token_budget is not None and args.token_budget <= 0:
-        ap.error("--token-budget must be positive (omit it for "
-                 "unthrottled slots)")
-    if args.gamma <= 0:
-        ap.error("--gamma must be positive")
-    if args.gamma_max is not None and args.gamma_max <= 0:
-        ap.error("--gamma-max must be positive (omit it for 2 * --gamma)")
+    # flag translation + cross-flag validation live in the configs'
+    # from_args constructors (serving/engine.py et al.) — ONE place tests
+    # and benchmarks share; this launcher only maps ValueError to the
+    # argparse exit and validates the cluster-level (multi-config) splits
+    try:
+        base_ecfg = EngineConfig.from_args(args)
+        rcfg = RouterConfig.from_args(args)
+    except ValueError as e:
+        ap.error(str(e))
     if args.arrival_rate is not None and args.arrival_rate <= 0:
         ap.error("--arrival-rate must be positive (omit it for "
                  "all-at-t=0 arrivals)")
@@ -209,25 +224,16 @@ def main(argv=None):
         ap.error("--capacity must be positive")
     if args.replicas <= 0:
         ap.error("--replicas must be positive")
-    if args.spec_branch < 1:
-        ap.error("--spec-branch must be >= 1")
-    if args.spec_shape == "tree":
-        gmax = (args.gamma if args.gamma_policy == "fixed"
-                else (args.gamma_max if args.gamma_max is not None
-                      else 2 * args.gamma))
-        max_nodes = D.max_tree_nodes()
-        if gmax + min(args.spec_branch, gmax) > max_nodes:
-            ap.error(f"--spec-shape tree needs gamma_max + branches <= "
-                     f"{max_nodes} tree nodes for the "
-                     f"{D.ANCESTOR_MASK_BITS}-bit ancestor mask (got "
-                     f"--gamma-max {gmax}, --spec-branch "
-                     f"{args.spec_branch}); lower one of them")
+    if args.slo_scale <= 0:
+        ap.error("--slo-scale must be positive")
 
     llm, ssms = build_zoo(args.vocab, args.seed, args.n_ssms)
     reqs = make_workload(args.dataset, args.requests, args.vocab,
                          seed=args.seed, scale=args.scale,
-                         arrival_rate=args.arrival_rate)
-    capacity = args.capacity if args.capacity is not None else args.requests
+                         arrival_rate=args.arrival_rate,
+                         slo_profile=args.slo_profile,
+                         slo_scale=args.slo_scale)
+    capacity = base_ecfg.capacity
     n_rep = args.replicas
     if n_rep > capacity:
         ap.error(f"--replicas {n_rep} exceeds the aggregate --capacity "
@@ -243,22 +249,8 @@ def main(argv=None):
         sel = make_selector(args.selector, len(ssms), cap,
                             {r.rid: r.prompt_len for r in reqs}, seed,
                             group_of={r.rid: r.dataset for r in reqs})
-        ecfg = EngineConfig(gamma=args.gamma, gamma_policy=args.gamma_policy,
-                            gamma_max=args.gamma_max, max_len=256,
-                            capacity=cap,
-                            use_packed_verify=not args.no_packed,
-                            use_pipeline=not args.no_pipeline,
-                            scheduler_policy=args.scheduler,
-                            kv_budget=kv_budget,
-                            kv_layout=args.kv_layout,
-                            block_size=args.block_size,
-                            prefill_chunk=args.prefill_chunk,
-                            token_budget=args.token_budget,
-                            spec_shape=args.spec_shape,
-                            spec_branch=args.spec_branch,
-                            fused_kernels=args.fused_kernels,
-                            kv_dtype=args.kv_dtype,
-                            seed=seed)
+        ecfg = dataclasses.replace(base_ecfg, capacity=cap,
+                                   kv_budget=kv_budget, seed=seed)
         return SpinEngine(llm, ssms, sel, ecfg)
 
     if n_rep > 1 or args.router_policy is not None:
@@ -270,8 +262,7 @@ def main(argv=None):
                if args.kv_budget is not None else [None] * n_rep)
         engines = [make_engine(caps[i], kvs[i], args.seed)
                    for i in range(n_rep)]
-        router = Router(engines, RouterConfig(
-            policy=args.router_policy or "lot", seed=args.seed))
+        router = Router(engines, rcfg)
         router.submit(reqs)
         stats = router.run(max_slots=args.max_slots)
     else:

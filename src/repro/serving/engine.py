@@ -69,6 +69,8 @@ from repro.models import transformer as T
 from repro.serving.paged import paged_compatible
 from repro.serving.pool import DenseCachePool, PagedCachePool
 from repro.serving.scheduler import ContinuousScheduler, SchedulerConfig
+from repro.serving.stats import (EngineStats, expected_time_per_token,
+                                 slo_headroom, slo_summary)
 
 
 def _bucket(n: int, align: int = 16) -> int:
@@ -145,6 +147,70 @@ class EngineConfig:
     # layout; a quantized choice under the dense fallback warns and
     # reverts to bf16.
     kv_dtype: str = "bf16"
+    # SLO-aware serving: when True, requests carrying a Request.slo
+    # contract steer admission order, prefill chunk sizing and (under the
+    # adaptive gamma policy) speculation depth.  Requests WITHOUT a
+    # contract are handled identically either way, so True with an
+    # SLO-free workload is bit-identical to False — the
+    # `--slo-profile off` contract.
+    slo_aware: bool = True
+
+    @classmethod
+    def from_args(cls, args, *, capacity=None, kv_budget=None, seed=None):
+        """Build an EngineConfig from a ``launch.serve.build_parser()``
+        namespace — THE flag translation, shared by serve.py, tests and
+        benchmarks so nobody re-derives it by hand.  ``capacity`` /
+        ``kv_budget`` override the per-replica share (serve.py splits the
+        aggregate flags across replicas); cross-flag validation lives
+        here and raises ``ValueError`` (serve.py maps it to
+        ``parser.error``)."""
+        if args.block_size <= 0:
+            raise ValueError("--block-size must be positive")
+        if args.prefill_chunk < 0:
+            raise ValueError(
+                "--prefill-chunk must be >= 0 (0 disables chunking)")
+        if args.token_budget is not None and args.token_budget <= 0:
+            raise ValueError("--token-budget must be positive (omit it "
+                             "for unthrottled slots)")
+        if args.gamma <= 0:
+            raise ValueError("--gamma must be positive")
+        if args.gamma_max is not None and args.gamma_max <= 0:
+            raise ValueError(
+                "--gamma-max must be positive (omit it for 2 * --gamma)")
+        if args.spec_branch < 1:
+            raise ValueError("--spec-branch must be >= 1")
+        if args.spec_shape == "tree":
+            gmax = (args.gamma if args.gamma_policy == "fixed"
+                    else (args.gamma_max if args.gamma_max is not None
+                          else 2 * args.gamma))
+            max_nodes = D.max_tree_nodes()
+            if gmax + min(args.spec_branch, gmax) > max_nodes:
+                raise ValueError(
+                    f"--spec-shape tree needs gamma_max + branches <= "
+                    f"{max_nodes} tree nodes for the "
+                    f"{D.ANCESTOR_MASK_BITS}-bit ancestor mask (got "
+                    f"--gamma-max {gmax}, --spec-branch "
+                    f"{args.spec_branch}); lower one of them")
+        return cls(
+            gamma=args.gamma, gamma_policy=args.gamma_policy,
+            gamma_max=args.gamma_max, max_len=256,
+            capacity=(capacity if capacity is not None
+                      else (args.capacity if args.capacity is not None
+                            else args.requests)),
+            use_packed_verify=not args.no_packed,
+            use_pipeline=not args.no_pipeline,
+            scheduler_policy=args.scheduler,
+            kv_budget=kv_budget if kv_budget is not None else args.kv_budget,
+            kv_layout=args.kv_layout,
+            block_size=args.block_size,
+            prefill_chunk=args.prefill_chunk,
+            token_budget=args.token_budget,
+            spec_shape=args.spec_shape,
+            spec_branch=args.spec_branch,
+            fused_kernels=args.fused_kernels,
+            kv_dtype=args.kv_dtype,
+            slo_aware=getattr(args, "slo_profile", "off") != "off",
+            seed=seed if seed is not None else args.seed)
 
 
 class SpinEngine:
@@ -286,6 +352,7 @@ class SpinEngine:
         self.chunked = (ecfg.prefill_chunk > 0
                         and ecfg.scheduler_policy == "continuous"
                         and not llm.has_recurrent_state)
+        self.slo_aware = ecfg.slo_aware
         self.scheduler = ContinuousScheduler(SchedulerConfig(
             capacity=ecfg.capacity, max_len=self.max_len,
             gamma=self.gamma_max,
@@ -293,7 +360,8 @@ class SpinEngine:
             block_size=ecfg.block_size if self.paged else 0,
             prefill_chunk=ecfg.prefill_chunk if self.chunked else 0,
             token_budget=ecfg.token_budget,
-            spec_branches=self.branches))
+            spec_branches=self.branches,
+            slo_aware=ecfg.slo_aware))
         self.rng = jax.random.PRNGKey(ecfg.seed)
         # metrics
         self.sim_time = 0.0
@@ -360,6 +428,26 @@ class SpinEngine:
         """Fraction of the admissible KV budget currently committed."""
         budget = max(1, self.scheduler.kv_budget)
         return 1.0 - self.kv_free_cells() / budget
+
+    def snapshot(self) -> EngineStats:
+        """The engine's typed dispatch-time telemetry: ONE frozen object
+        embedding the scheduler snapshot — the router's (and any
+        benchmark's) replica view.  ``slo_headroom`` is the SpecServe
+        dispatch term: slack to the most urgent outstanding deadline
+        minus the estimated time to drain the current token backlog."""
+        sched = self.scheduler.snapshot()
+        out = self.outstanding_tokens()
+        tpt = expected_time_per_token(self.sim_time, self.accepted_tokens,
+                                      self.cost.llm_time_per_token)
+        return EngineStats(
+            sim_time=self.sim_time,
+            outstanding_tokens=out,
+            kv_free_cells=self.kv_free_cells(),
+            kv_occupancy=self.kv_occupancy(),
+            accepted_tokens=self.accepted_tokens,
+            slo_headroom=slo_headroom(sched.min_deadline, self.sim_time,
+                                      out, tpt),
+            scheduler=sched)
 
     def add_requests(self, reqs: Sequence[Request]):
         """Submit requests.  Arrival timestamps on the requests are
@@ -544,6 +632,18 @@ class SpinEngine:
         self._prefill_cells_pending = 0.0
         return t, toks
 
+    def _stamp_tokens(self, r: Request):
+        """Deadline attainment source: ``token_times[j]`` is the sim-clock
+        instant token j was committed — the end of the slot that paid for
+        it (commit loop) or, for the prefill-born first token, the end of
+        the slot that carried the prefill work (same instant
+        ``first_token_time`` is stamped).  Idempotent: only missing tails
+        are appended, so preempted requests keep their history."""
+        if r.token_times is None:
+            r.token_times = []
+        while len(r.token_times) < len(r.emitted or []):
+            r.token_times.append(self.sim_time)
+
     def _stamp_first_tokens(self):
         """TTFT: a request's first token exists once its (monolithic or
         final-chunk) prefill has been paid for on the sim clock — i.e. at
@@ -554,6 +654,7 @@ class SpinEngine:
             r = self.requests[rid]
             if r.emitted:
                 r.first_token_time = self.sim_time
+                self._stamp_tokens(r)
                 self._unstamped.discard(rid)
 
     def step(self) -> dict:
@@ -608,10 +709,18 @@ class SpinEngine:
         # tokens this slot's plan already granted, so decode + prefill
         # together respect the token budget; the scheduler's next
         # token-budget split costs decode slots at these granted depths.
+        slo_slack = None
+        if self.slo_aware:
+            # seconds until each SLO-carrying request's next-token
+            # deadline — the gamma controller's deadline-headroom input;
+            # None/absent entries mean no deadline pressure
+            slo_slack = {r.rid: r.next_deadline() - self.sim_time
+                         for r in active if r.slo is not None} or None
         depths = self.gamma_ctl.grant(
             ids, assign,
             token_budget=self.ecfg.token_budget if self.chunked else None,
-            reserved_tokens=self.scheduler.last_prefill_granted)
+            reserved_tokens=self.scheduler.last_prefill_granted,
+            slo_slack=slo_slack)
         # tree mode: a depth-k grant verifies k + b_eff query tokens (one
         # root copy per branch), so the step planner's token-budget split
         # must see that cost; linear b_eff = 1 keeps the k + 1 charge
@@ -695,6 +804,7 @@ class SpinEngine:
             r = self.requests[rid]
             k = int(out_len[i])
             r.emitted.extend(int(x) for x in out[i, :k])
+            self._stamp_tokens(r)
             slot_tokens += k
             g = k / max(slot.makespan, 1e-9)
             self.selector.observe(rid, assign[rid], g)
@@ -1271,7 +1381,12 @@ class SpinEngine:
         ttft = [r.first_token_time - r.arrival
                 for r in self.requests.values()
                 if r.first_token_time is not None]
+        summ = slo_summary(self.requests.values())
         return {
+            "slo_aware": self.slo_aware,
+            "slo": {**summ.asdict(),
+                    "goodput_under_slo":
+                        summ.goodput_under_slo(self.sim_time)},
             "kv_layout": "paged" if self.paged else "dense",
             "kv_blocks": (self.llm_pool.num_blocks if self.paged else None),
             "prefill_chunk": (self.ecfg.prefill_chunk if self.chunked

@@ -27,9 +27,20 @@ arrival instant by a routing policy:
   probes get most of the benefit of querying everyone, and probing
   *memory* rather than queue length tracks the resource that actually
   gates admission.
+* ``slo`` — **most SLO headroom** (SpecServe's cluster-level dispatch
+  term): dispatch to the replica whose ``EngineStats.slo_headroom`` —
+  slack to its most urgent outstanding deadline, net of the estimated
+  time to drain its token backlog — is largest.  A deadline-free
+  replica reads a large constant horizon minus its backlog drain time,
+  so with no contracts anywhere the policy degrades to a
+  backlog-drain-time comparison (lot weighted by observed service
+  rate); with contracts it keeps strict traffic away from replicas that
+  are already close to busting a deadline.
 
 Ties always break toward the lower replica index, so a dispatch trace is
-reproducible from (policy, seed, workload) alone.
+reproducible from (policy, seed, workload) alone.  Policies read the
+typed :class:`~repro.serving.stats.ReplicaStats` snapshots
+(``replica_snapshot()``) — attributes, not string-keyed dicts.
 
 Co-simulation: each replica advances its own simulated clock, and the
 router always steps the replica that is furthest behind (min ``sim_time``
@@ -62,8 +73,9 @@ import numpy as np
 
 from repro.data.workloads import Request
 from repro.serving.engine import SpinEngine
+from repro.serving.stats import ReplicaStats, slo_summary
 
-POLICIES = ("lot", "p2c")
+POLICIES = ("lot", "p2c", "slo")
 
 
 @dataclasses.dataclass(kw_only=True)
@@ -72,11 +84,18 @@ class RouterConfig:
     as the router grows)."""
 
     policy: str = "lot"
-    seed: int = 0          # p2c probe sampling (lot is sample-free)
+    seed: int = 0          # p2c probe sampling (lot/slo are sample-free)
 
     def __post_init__(self):
         if self.policy not in POLICIES:
             raise ValueError(f"unknown router policy {self.policy!r}")
+
+    @classmethod
+    def from_args(cls, args):
+        """Build a RouterConfig from a ``launch.serve.build_parser()``
+        namespace (``--router-policy`` unset means the default policy,
+        routed or not — serve.py decides whether a router exists)."""
+        return cls(policy=args.router_policy or "lot", seed=args.seed)
 
 
 class Router:
@@ -124,23 +143,13 @@ class Router:
             self._seq += 1
 
     # ----------------------------------------------------------- policy --
-    def replica_snapshot(self) -> List[dict]:
+    def replica_snapshot(self) -> List[ReplicaStats]:
         """Live per-replica state, the policies' (and benchmarks') view:
-        queue depth, outstanding token load, KV occupancy, clock."""
-        out = []
-        for i, eng in enumerate(self.engines):
-            out.append({
-                "replica": i,
-                "sim_time": eng.sim_time,
-                "queue_depth": eng.scheduler.queue_depth,
-                "running": len(eng.scheduler.running),
-                "outstanding_tokens": eng.outstanding_tokens(),
-                "kv_free_cells": eng.kv_free_cells(),
-                "kv_occupancy": eng.kv_occupancy(),
-                "accepted_tokens": eng.accepted_tokens,
-                "dispatched": self.dispatch_count[i],
-            })
-        return out
+        one typed :class:`ReplicaStats` per replica — the engine's frozen
+        snapshot tagged with its index and dispatch count."""
+        return [ReplicaStats(replica=i, dispatched=self.dispatch_count[i],
+                             engine=eng.snapshot())
+                for i, eng in enumerate(self.engines)]
 
     def _eligible(self) -> List[int]:
         """Replicas a dispatch may target: those with step budget left in
@@ -161,6 +170,12 @@ class Router:
             return min(cand,
                        key=lambda i: (self.engines[i].outstanding_tokens(),
                                       i))
+        if self.cfg.policy == "slo":
+            # most cluster-level SLO headroom (ties: lower index) — reads
+            # the typed engine snapshots, not ad-hoc probes
+            return min(cand,
+                       key=lambda i: (-self.engines[i].snapshot()
+                                      .slo_headroom, i))
         # p2c: two seeded probes of *distinct* replicas, keep the roomier
         # one (ties: lower index).  Sampling with replacement would
         # collapse to a single uniform probe 1/n of the time — at n=2
@@ -246,8 +261,11 @@ class Router:
         lat = [r.latency for r in reqs if r.latency is not None]
         ttft = [r.first_token_time - r.arrival for r in reqs
                 if r.first_token_time is not None]
+        summ = slo_summary(reqs)
         return {
             "router_policy": self.cfg.policy,
+            "slo": {**summ.asdict(),
+                    "goodput_under_slo": summ.goodput_under_slo(makespan)},
             "replicas": len(self.engines),
             "dispatched": list(self.dispatch_count),
             "undispatched": len(self._pending),
@@ -263,6 +281,7 @@ class Router:
             "ttft_p95": float(np.percentile(ttft, 95)) if ttft else 0.0,
             "finished": sum(len(eng.scheduler.finished)
                             for eng in self.engines),
-            "replica_snapshot": self.replica_snapshot(),
+            "replica_snapshot": [s.asdict()
+                                 for s in self.replica_snapshot()],
             "replica_stats": per,
         }

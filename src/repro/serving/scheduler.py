@@ -16,9 +16,13 @@ applies the returned decision:
   (Poisson or trace-driven, see ``data/workloads.py``); they become
   admissible only once the engine clock reaches it.
 * **admission** — waiting requests are admitted by rank
-  ``(priority, arrival, rid)`` into free ``CachePool`` rows (default
-  priority 0 for every request reproduces plain FIFO-by-arrival exactly;
-  a lower priority value = more urgent, like a nice level).
+  ``(next_deadline, priority, arrival, rid)`` into free ``CachePool``
+  rows: deadline-closest-first for requests carrying an SLO contract
+  (``Request.slo``), then lower priority value = more urgent (like a
+  nice level), then FIFO by arrival.  Requests without an SLO have an
+  infinite deadline, so a contract-free stream reproduces the pre-SLO
+  ``(priority, arrival, rid)`` order — and default priority 0 everywhere
+  reproduces plain FIFO-by-arrival — exactly.
 * **chunked prefill** (``prefill_chunk > 0``) — an admitted request does
   not prefill its whole prompt in one monolithic pass.  It enters a
   ``prefilling`` lifecycle state (owns a row, holds partial KV, does not
@@ -33,10 +37,12 @@ applies the returned decision:
   step; the end-of-step ``plan`` immediately re-fills them, so a row never
   idles across a slot boundary while work is queued.
 * **preemption** — when the projected KV demand of the running set exceeds
-  ``kv_budget`` cells, victims are chosen lowest-priority-first (ties by
-  latest arrival) and re-enqueued for re-prefill.  At least ``min_running``
-  requests always keep their rows, and an empty pool always admits, so the
-  engine can never deadlock at full capacity.
+  ``kv_budget`` cells, victims are chosen farthest-from-deadline-first
+  (then lowest-priority, ties by latest arrival) and re-enqueued for
+  re-prefill — a request already pressed against its deadline is never
+  sacrificed for a same-priority request with slack.  At least
+  ``min_running`` requests always keep their rows, and an empty pool
+  always admits, so the engine can never deadlock at full capacity.
 
 Progress guarantees with chunking: a preempted prefilling request loses
 its partial KV (blocks are freed) and restarts from chunk zero on
@@ -80,9 +86,11 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import heapq
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.data.workloads import Request
+from repro.serving.stats import SchedulerStats, min_outstanding_deadline
 
 POLICIES = ("continuous", "static")
 
@@ -119,6 +127,49 @@ class SchedulerConfig:
     # worst case per extra branch so admission cannot over-commit the
     # block pool.  1 = linear (no reservation).
     spec_branches: int = 1
+    # honour per-request SLO contracts (Request.slo): admission ranks
+    # deadline-closest-first, preemption victims are farthest-from-
+    # deadline-first, and the token-budget split sizes prefill chunks
+    # against TTFT slack.  False ignores contracts entirely (the
+    # deadline-blind baseline); either way, requests WITHOUT an SLO rank
+    # exactly by the pre-SLO (priority, arrival, rid) key, so a stream
+    # with no contracts is bit-identical under both settings.
+    slo_aware: bool = True
+
+    @classmethod
+    def from_args(cls, args, *, capacity: Optional[int] = None,
+                  kv_budget: Optional[int] = None) -> "SchedulerConfig":
+        """Build from a ``launch.serve.build_parser()`` namespace — the
+        one flag->config translation tests and benchmarks reuse instead
+        of re-deriving fields by hand.  ``capacity``/``kv_budget``
+        override the flags (the router splits aggregates per replica).
+        ``gamma`` is the engine's WORST-CASE depth (gamma_max under the
+        adaptive policy) — the same resolution ``SpinEngine`` applies."""
+        gamma = int(getattr(args, "gamma", 4))
+        if getattr(args, "gamma_policy", "fixed") == "fixed":
+            gmax = gamma
+        else:
+            gmax = getattr(args, "gamma_max", None)
+            gmax = int(gmax) if gmax is not None else 2 * gamma
+        paged = getattr(args, "kv_layout", "paged") == "paged"
+        branches = (int(getattr(args, "spec_branch", 1))
+                    if getattr(args, "spec_shape", "linear") == "tree"
+                    else 1)
+        return cls(
+            capacity=int(capacity if capacity is not None
+                         else getattr(args, "capacity", None)
+                         or getattr(args, "requests", 8)),
+            gamma=gmax,
+            kv_budget=(kv_budget if kv_budget is not None
+                       else getattr(args, "kv_budget", None)),
+            policy=getattr(args, "scheduler", "continuous"),
+            block_size=(int(getattr(args, "block_size", 16))
+                        if paged else 0),
+            prefill_chunk=int(getattr(args, "prefill_chunk", 0)),
+            token_budget=getattr(args, "token_budget", None),
+            spec_branches=branches,
+            slo_aware=getattr(args, "slo_profile", "off") != "off",
+        )
 
 
 @dataclasses.dataclass
@@ -139,10 +190,24 @@ class Decision:
 
 
 def _rank(r: Request):
-    """Admission / victim ranking: lower priority value first (more
-    urgent), then FIFO by arrival.  Default priority 0 everywhere makes
-    this exactly the pre-priority FIFO order."""
-    return (r.priority, r.arrival, r.rid)
+    """Admission / victim ranking: deadline-closest-first for requests
+    carrying an SLO, then the pre-SLO key ``(priority, arrival, rid)``
+    — lower priority value first (more urgent), then FIFO by arrival.
+
+    ``next_deadline()`` is +inf without an SLO, so a stream with no
+    contracts orders byte-for-byte like the pre-SLO scheduler; equal
+    deadlines (including the all-inf case) fall back to the same total,
+    stable ``(priority, arrival, rid)`` order.  Reversed, this is the
+    preemption-victim order: farthest-from-deadline-first, THEN lowest
+    priority / latest arrival — a request past its deadline is never
+    sacrificed for a same-priority request with slack."""
+    return (r.next_deadline(), r.priority, r.arrival, r.rid)
+
+
+def _blind_rank(r: Request):
+    """The pre-SLO ranking, kept for ``slo_aware=False`` (the
+    deadline-blind baseline the SLO benchmarks compare against)."""
+    return (math.inf, r.priority, r.arrival, r.rid)
 
 
 class ContinuousScheduler:
@@ -160,6 +225,10 @@ class ContinuousScheduler:
         if cfg.token_budget is not None and cfg.token_budget <= 0:
             raise ValueError("token_budget must be positive")
         self.cfg = cfg
+        # one ranking for admission AND (reversed) victim selection:
+        # deadline-closest-first when contracts are honoured, the pre-SLO
+        # (priority, arrival, rid) key when blind
+        self._rankkey = _rank if cfg.slo_aware else _blind_rank
         self.kv_budget = (cfg.kv_budget if cfg.kv_budget is not None
                           else cfg.capacity * cfg.max_len)
         self._pending: List = []           # heap of (arrival, seq, Request)
@@ -184,6 +253,14 @@ class ContinuousScheduler:
         # gamma controller reads this so its depth cap charges the actual
         # prefill work sharing this slot's token budget
         self.last_prefill_granted = 0
+        # slot-duration EMA (sim-clock gap between successive plan()
+        # calls): converts a TTFT deadline into "slots left", so the
+        # chunk split can size a tight request's chunk to finish its
+        # prefill before the deadline.  Observation only — with no SLOs
+        # (or slo_aware=False) it never changes a decision.
+        self._last_plan_now: Optional[float] = None
+        self._slot_dt: Optional[float] = None
+        self.slo_chunk_boosts = 0          # chunks grown for TTFT slack
 
     # ----------------------------------------------------------- intake --
     def submit(self, reqs: Sequence[Request]):
@@ -197,7 +274,7 @@ class ContinuousScheduler:
         waiting queue (kept sorted by rank)."""
         while self._pending and self._pending[0][0] <= now + 1e-12:
             arrival, _, r = heapq.heappop(self._pending)
-            bisect.insort(self.waiting, r, key=_rank)
+            bisect.insort(self.waiting, r, key=self._rankkey)
             # queue wait starts at the actual arrival, not the first poll
             # that noticed it — several requests landing inside one slot
             # must each be charged their own wait
@@ -256,11 +333,17 @@ class ContinuousScheduler:
         pass, so chunk budgets are spent once per slot, not once per
         ``plan`` call)."""
         self.poll(now)
+        if (self._last_plan_now is not None
+                and now > self._last_plan_now + 1e-12):
+            dt = now - self._last_plan_now
+            self._slot_dt = (dt if self._slot_dt is None
+                             else 0.5 * self._slot_dt + 0.5 * dt)
+        self._last_plan_now = now
         if self.cfg.policy == "static":
             return self._plan_static()
         dec = self._plan_continuous()
         if grant_prefill and self.cfg.prefill_chunk > 0:
-            dec.prefill = self._plan_chunks(dec)
+            dec.prefill = self._plan_chunks(dec, now)
             self.last_prefill_granted = sum(n for _, n in dec.prefill)
         return dec
 
@@ -277,10 +360,13 @@ class ContinuousScheduler:
         admit: List[Request] = []
         preempt: List[Request] = []
         # Preempt while projected demand exceeds the KV budget.  Victims
-        # are the worst-ranked runners — lowest priority class first, ties
-        # by latest arrival; the best-ranked min_running requests always
-        # keep their rows (guaranteed progress -> no livelock).
-        runners = sorted(self.running.values(), key=_rank)
+        # are the worst-ranked runners — farthest-from-deadline first
+        # once SLOs exist (a request past its deadline is never the
+        # victim over a same-priority request with slack), then lowest
+        # priority class, ties by latest arrival; the best-ranked
+        # min_running requests always keep their rows (guaranteed
+        # progress -> no livelock).
+        runners = sorted(self.running.values(), key=self._rankkey)
         demand = sum(self.kv_need(r) for r in runners)
         while demand > self.kv_budget and len(runners) > self.cfg.min_running:
             victim = runners.pop()
@@ -314,18 +400,41 @@ class ContinuousScheduler:
         (fixed policy / fresh admits: cfg.gamma + 1)."""
         return self.decode_depths.get(rid, self.cfg.gamma) + 1
 
-    def _plan_chunks(self, dec: Decision) -> List[Tuple[Request, int]]:
+    def _slo_chunk(self, r: Request, remaining: int, now: float) -> int:
+        """TTFT-slack-aware chunk size: the tokens this slot must ingest
+        so the request's remaining prefill completes before its TTFT
+        deadline at the observed slot cadence.  At most ``prefill_chunk``
+        unless the deadline demands more; never below ``prefill_chunk``
+        (a tight budget still caps the grant downstream).  Requests
+        without an SLO — or a scheduler without a cadence estimate yet —
+        keep the flat ``prefill_chunk``."""
+        base = min(self.cfg.prefill_chunk, remaining)
+        if (not self.cfg.slo_aware or r.slo is None
+                or self._slot_dt is None or self._slot_dt <= 0):
+            return base
+        slack = r.next_deadline() - now
+        slots_left = max(1.0, slack / self._slot_dt)
+        needed = int(math.ceil(remaining / slots_left))
+        if needed > base:
+            self.slo_chunk_boosts += 1
+            return min(needed, remaining)
+        return base
+
+    def _plan_chunks(self, dec: Decision,
+                     now: float) -> List[Tuple[Request, int]]:
         """Split this slot's token budget between decode slots and prompt
         chunks.  Decode comes first (every decode-active request costs its
         granted depth + 1 query tokens); the remainder goes to prefilling
-        requests in rank order, capped at ``prefill_chunk`` tokens each.
-        When nothing is decode-active, the top-ranked prefilling request is
-        granted a chunk unconditionally — an otherwise-idle slot must make
+        requests in rank order — deadline-closest-first under SLOs —
+        capped at ``prefill_chunk`` tokens each unless a request's TTFT
+        slack demands a bigger chunk (:meth:`_slo_chunk`).  When nothing
+        is decode-active, the top-ranked prefilling request is granted a
+        chunk unconditionally — an otherwise-idle slot must make
         progress."""
         victims = {r.rid for r in dec.preempt}
         cands = sorted(
             [r for rid, r in self.prefilling.items() if rid not in victims]
-            + list(dec.admit), key=_rank)
+            + list(dec.admit), key=self._rankkey)
         decoders = [rid for rid in self.running
                     if rid not in victims and rid not in self.prefilling]
         n_decode = len(decoders)
@@ -339,7 +448,7 @@ class ContinuousScheduler:
             remaining = self.prefill_target(r) - r.prefill_pos
             if remaining <= 0:
                 continue
-            n = min(self.cfg.prefill_chunk, remaining)
+            n = self._slo_chunk(r, remaining, now)
             if left is not None:
                 n = min(n, left)
             if n <= 0:
@@ -383,7 +492,7 @@ class ContinuousScheduler:
         r.prefill_pos = 0
         r.preemptions += 1
         self.preemptions += 1
-        bisect.insort(self.waiting, r, key=_rank)
+        bisect.insort(self.waiting, r, key=self._rankkey)
         self._wait_since[r.rid] = now
 
     def mark_finished(self, rid: int):
@@ -392,11 +501,28 @@ class ContinuousScheduler:
         self.finished.append(rid)
 
     # ------------------------------------------------------------ stats --
+    def snapshot(self) -> SchedulerStats:
+        """The typed point-in-time view (serving/stats.py) the engine
+        embeds in its own snapshot: queue/lifecycle counters plus the
+        most urgent outstanding next-token deadline."""
+        return SchedulerStats(
+            queue_depth=self.queue_depth,
+            running=len(self.running),
+            prefilling=len(self.prefilling),
+            admissions=self.admissions,
+            preemptions=self.preemptions,
+            finished=len(self.finished),
+            queue_wait=self.queue_wait,
+            min_deadline=min_outstanding_deadline(
+                self.outstanding_requests()),
+        )
+
     @property
     def stats(self) -> dict:
         return {
             "policy": self.cfg.policy,
             "kv_budget": self.kv_budget,
+            "slo_aware": self.cfg.slo_aware,
             "admissions": self.admissions,
             "preemptions": self.preemptions,
             "finished": len(self.finished),
@@ -405,4 +531,5 @@ class ContinuousScheduler:
             "prefill_grants": self.prefill_grants,
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens_planned": self.decode_tokens_planned,
+            "slo_chunk_boosts": self.slo_chunk_boosts,
         }

@@ -77,7 +77,7 @@ def sim_stats(stats: dict) -> dict:
 # ------------------------------------------------------- N=1 bit-identity --
 
 
-@pytest.mark.parametrize("policy", ["lot", "p2c"])
+@pytest.mark.parametrize("policy", ["lot", "p2c", "slo"])
 def test_single_replica_router_bit_identical(models, policy):
     """A 1-replica router must add nothing: same tokens, same sim clock,
     same scheduler counters as driving the bare engine directly."""
@@ -128,7 +128,7 @@ def test_single_replica_bit_identical_chunked_adaptive(models):
 # ------------------------------------------------------------ conservation --
 
 
-@pytest.mark.parametrize("policy", ["lot", "p2c"])
+@pytest.mark.parametrize("policy", ["lot", "p2c", "slo"])
 def test_dispatch_conservation_and_losslessness(models, policy):
     """Every request is served by exactly one replica, and sharding the
     stream never changes any request's tokens (speculative decoding is
@@ -204,7 +204,7 @@ def test_replicas_drain_on_empty_queues(models):
     assert st["aggregate_goodput_sim"] > 0.0
 
 
-@pytest.mark.parametrize("policy", ["lot", "p2c"])
+@pytest.mark.parametrize("policy", ["lot", "p2c", "slo"])
 def test_kv_exhausted_replica_spills_no_deadlock(models, policy):
     """A replica whose KV budget is (nearly) exhausted must not absorb
     the stream: new work spills to the roomy replica and everything still

@@ -1,0 +1,549 @@
+"""SLO-aware serving (ISSUE 9): the ``Request.slo`` contract threaded
+scheduler -> gamma -> router.
+
+Policy-level: admission ranking is total and deterministic, falls back
+byte-for-byte to the pre-SLO ``(priority, arrival, rid)`` key for
+contract-free requests, preemption victims are farthest-from-deadline
+first, TTFT slack boosts prefill chunks, and the gamma controller trims
+speculation depth to deadline headroom.  Config-level: the ``from_args``
+constructors are THE flag translation (defaults match ``build_parser``,
+invalid combinations raise).  Engine-level: a stamped stream under
+``slo_aware=False`` is bit-identical (tokens AND sim clock) to the
+unstamped pre-SLO engine, the aware path stays lossless, and
+``token_times`` stamps every emitted token on the sim clock.
+"""
+
+import math
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import spec_decode as sd
+from repro.core.gamma import GammaConfig, GammaController
+from repro.core.pipeline import CostModel
+from repro.core.selector import LBSS, SelectorConfig
+from repro.data.workloads import SLO, SLO_PROFILES, Request, assign_slos, make_workload
+from repro.launch.serve import build_parser
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, SpinEngine
+from repro.serving.router import Router, RouterConfig
+from repro.serving.scheduler import (
+    ContinuousScheduler,
+    SchedulerConfig,
+    _blind_rank,
+    _rank,
+)
+from repro.serving.stats import (
+    DEADLINE_HORIZON,
+    EngineStats,
+    SLOSummary,
+    min_outstanding_deadline,
+    slo_headroom,
+    slo_summary,
+)
+
+VOCAB = 256
+
+
+def _req(rid, arrival=0.0, prompt_len=8, max_new=8, priority=0, slo=None, emitted=None):
+    return Request(
+        rid=rid,
+        dataset="cip",
+        difficulty=0.5,
+        prompt=np.zeros(prompt_len, np.int32),
+        max_new=max_new,
+        arrival=arrival,
+        priority=priority,
+        slo=slo,
+        emitted=list(emitted or []),
+    )
+
+
+# ---------------------------------------------------------- the contract --
+
+
+def test_token_deadline_chain():
+    s = SLO(ttft_deadline=0.1, tpot_target=0.01)
+    assert s.token_deadline(2.0, 0) == pytest.approx(2.1)
+    assert s.token_deadline(2.0, 5) == pytest.approx(2.15)
+
+
+def test_next_deadline_inf_without_contract_else_next_token():
+    r = _req(0, arrival=1.0)
+    assert r.next_deadline() == math.inf
+    r = _req(1, arrival=1.0, slo=SLO(0.1, 0.01), emitted=[7, 7])
+    assert r.next_deadline() == pytest.approx(1.0 + 0.1 + 2 * 0.01)
+
+
+def test_assign_slos_profiles_and_scale():
+    reqs = [_req(0), _req(1)]
+    assert assign_slos(reqs, "off") == reqs
+    assert all(r.slo is None for r in reqs)
+    assign_slos(reqs, "strict", scale=2.0)
+    want = SLO_PROFILES["strict"]["cip"]
+    assert reqs[0].slo.ttft_deadline == pytest.approx(2.0 * want.ttft_deadline)
+    assert reqs[0].slo.tpot_target == pytest.approx(2.0 * want.tpot_target)
+    with pytest.raises(ValueError, match="unknown SLO profile"):
+        assign_slos(reqs, "nope")
+
+
+# ------------------------------------------------------ admission ranking --
+
+
+def test_rank_orders_deadline_closest_first():
+    lax = _req(0, arrival=0.0, slo=SLO(1.0, 0.06))
+    strict = _req(1, arrival=0.01, slo=SLO(0.05, 0.006))
+    none = _req(2, arrival=0.0)
+    order = sorted([none, lax, strict], key=_rank)
+    assert [r.rid for r in order] == [1, 0, 2]
+
+
+def test_rank_total_deterministic_and_falls_back_to_pre_slo_key():
+    """Property: over random mixes of stamped/unstamped requests the
+    ranking is a total order (any shuffle sorts identically) and ties on
+    the deadline — including the all-inf contract-free case — break by
+    exactly the pre-SLO ``(priority, arrival, rid)`` key."""
+    rng = random.Random(7)
+    for _trial in range(50):
+        reqs = []
+        for rid in range(rng.randrange(2, 20)):
+            slo = None
+            if rng.random() >= 0.4:
+                ttft = rng.choice([0.05, 0.1, 0.1, 1.0])
+                slo = SLO(ttft, rng.choice([0.006, 0.015]))
+            reqs.append(
+                _req(
+                    rid,
+                    arrival=rng.choice([0.0, 0.5, 1.0]),
+                    priority=rng.randrange(2),
+                    slo=slo,
+                )
+            )
+        base = sorted(reqs, key=_rank)
+        for _ in range(3):
+            rng.shuffle(reqs)
+            assert [r.rid for r in sorted(reqs, key=_rank)] == [r.rid for r in base]
+        # equal-deadline runs are ordered by the pre-SLO key
+        for a, b in zip(base, base[1:]):
+            if a.next_deadline() == b.next_deadline():
+                assert (a.priority, a.arrival, a.rid) < (b.priority, b.arrival, b.rid)
+
+
+def test_contract_free_ordering_is_byte_identical_to_pre_slo():
+    rng = random.Random(11)
+    reqs = [
+        _req(rid, arrival=rng.choice([0.0, 0.5, 1.0]), priority=rng.randrange(3))
+        for rid in range(30)
+    ]
+    rng.shuffle(reqs)
+    aware = [r.rid for r in sorted(reqs, key=_rank)]
+    blind = [r.rid for r in sorted(reqs, key=_blind_rank)]
+    pre_slo = [
+        r.rid for r in sorted(reqs, key=lambda r: (r.priority, r.arrival, r.rid))
+    ]
+    assert aware == blind == pre_slo
+    assert all(_rank(r)[0] == math.inf for r in reqs)
+
+
+def test_scheduler_admits_deadline_first_blind_admits_arrival_first():
+    def sched(aware):
+        s = ContinuousScheduler(
+            SchedulerConfig(capacity=1, max_len=64, gamma=3, slo_aware=aware)
+        )
+        s.submit(
+            [
+                _req(0, arrival=0.0, slo=SLO(1.0, 0.06)),
+                _req(1, arrival=0.001, slo=SLO(0.05, 0.006)),
+            ]
+        )
+        return [r.rid for r in s.plan(0.001).admit]
+
+    assert sched(True) == [1]  # strict request jumps the lax earlier one
+    assert sched(False) == [0]  # deadline-blind: plain arrival order
+
+
+# ------------------------------------------------------ preemption order --
+
+
+def test_preemption_victim_is_farthest_from_deadline():
+    """Under KV pressure the victim is the most-slack runner; a request
+    already past its deadline is never the victim over a same-priority
+    runner with slack."""
+    cfg = SchedulerConfig(capacity=3, max_len=64, gamma=3, kv_budget=40, min_running=1)
+    s = ContinuousScheduler(cfg)
+    late = _req(0, arrival=0.0, prompt_len=10, slo=SLO(0.01, 0.001))
+    lax = _req(1, arrival=0.0, prompt_len=10, slo=SLO(5.0, 0.06))
+    s.submit([late, lax])
+    for r in [late, lax]:
+        s.mark_admitted(r, 0.0)
+    # clock far past `late`'s deadline; both outgrow the budget
+    for r in [late, lax]:
+        r.emitted.extend([7] * 12)
+    dec = s.plan(1.0)
+    assert [r.rid for r in dec.preempt] == [1]
+    assert late.rid in s.running
+
+
+def test_blind_preemption_keeps_pre_slo_victim_order():
+    cfg = SchedulerConfig(
+        capacity=3, max_len=64, gamma=3, kv_budget=40, min_running=1, slo_aware=False
+    )
+    s = ContinuousScheduler(cfg)
+    a = _req(0, arrival=0.0, prompt_len=10, slo=SLO(5.0, 0.06))
+    b = _req(1, arrival=0.5, prompt_len=10, slo=SLO(0.01, 0.001))
+    s.submit([a, b])
+    for r in [a, b]:
+        s.mark_admitted(r, 0.5)
+        r.emitted.extend([7] * 12)
+    # blind: latest arrival is the victim, contracts ignored
+    assert [r.rid for r in s.plan(1.0).preempt] == [1]
+
+
+# ---------------------------------------------------------- chunk boosts --
+
+
+def test_ttft_slack_boosts_prefill_chunk():
+    cfg = SchedulerConfig(capacity=2, max_len=128, gamma=3, prefill_chunk=8)
+    s = ContinuousScheduler(cfg)
+    r = _req(0, arrival=0.0, prompt_len=64, slo=SLO(0.03, 0.01))
+    s.submit([r])
+    dec = s.plan(0.0)
+    for x in dec.admit:
+        s.mark_admitted(x, 0.0)
+    # no cadence estimate yet -> flat chunk
+    assert s._slo_chunk(r, 64, 0.0) == 8
+    # two plan calls 10ms apart establish the slot cadence: ~20ms of
+    # slack / 10ms slots = ~2 slots for 64 tokens -> ~32-token chunks
+    # (33 after float rounding in the slack division)
+    s.plan(0.01)  # this plan's own chunk pass already boosts once
+    assert s._slot_dt == pytest.approx(0.01)
+    before = s.slo_chunk_boosts
+    assert before >= 1
+    assert 32 <= s._slo_chunk(r, 64, 0.01) <= 33
+    assert s.slo_chunk_boosts == before + 1
+    # contract-free request keeps the flat chunk
+    assert s._slo_chunk(_req(9, prompt_len=64), 64, 0.01) == 8
+
+
+def test_blind_scheduler_never_boosts_chunks():
+    cfg = SchedulerConfig(
+        capacity=2, max_len=128, gamma=3, prefill_chunk=8, slo_aware=False
+    )
+    s = ContinuousScheduler(cfg)
+    r = _req(0, arrival=0.0, prompt_len=64, slo=SLO(0.03, 0.01))
+    s.submit([r])
+    s.plan(0.0)
+    s.plan(0.01)
+    assert s._slo_chunk(r, 64, 0.01) == 8
+    assert s.slo_chunk_boosts == 0
+
+
+# ------------------------------------------------------------- gamma cap --
+
+
+def _controller(gamma=4):
+    cost = CostModel(
+        ssm_time_per_token=[1e-4, 2e-4],
+        ssm_fixed=[2e-4, 2e-4],
+        llm_fixed=1e-3,
+        llm_time_per_token=5e-4,
+        gamma=gamma,
+    )
+    return GammaController(
+        GammaConfig(policy="adaptive", gamma=gamma, gamma_max=8), cost
+    )
+
+
+def test_gamma_slo_cap_trims_to_slack():
+    ctl = _controller(gamma=4)
+    # iteration_time(0, k) = 2e-4 + k*1e-4 + 1e-3 + (k+1)*5e-4
+    assert ctl.iteration_time(0, 2) < 3e-3 < ctl.iteration_time(0, 3)
+    depths = ctl.grant([0], {0: 0}, slo_slack={0: 3e-3})
+    assert depths[0] == 2
+    assert ctl.slo_capped == 2
+    assert ctl.stats["slo_capped"] == 2
+
+
+def test_gamma_slo_cap_floor_is_depth_one():
+    ctl = _controller(gamma=4)
+    # positive slack smaller than even a depth-1 iteration: floor at 1,
+    # never 0 (the slot must still make progress)
+    assert ctl.grant([0], {0: 0}, slo_slack={0: 1e-9}) == {0: 1}
+
+
+def test_gamma_slo_cap_skips_past_deadline_and_contract_free():
+    ctl = _controller(gamma=4)
+    depths = ctl.grant([0, 1, 2], {0: 0, 1: 0, 2: 0}, slo_slack={0: -1.0, 1: 0.0})
+    # past-deadline (slack <= 0) and contract-free (absent) requests
+    # keep the throughput-optimal depth
+    assert depths == {0: 4, 1: 4, 2: 4}
+    assert ctl.slo_capped == 0
+
+
+def test_gamma_fixed_policy_ignores_slack():
+    cost = CostModel(
+        ssm_time_per_token=[1e-4],
+        ssm_fixed=[2e-4],
+        llm_fixed=1e-3,
+        llm_time_per_token=5e-4,
+        gamma=4,
+    )
+    ctl = GammaController(GammaConfig(policy="fixed", gamma=4), cost)
+    assert ctl.grant([0], {0: 0}, slo_slack={0: 1e-9}) == {0: 4}
+
+
+# ----------------------------------------------------- stats + summaries --
+
+
+def test_slo_summary_counts_deadline_met_tokens():
+    ok = _req(0, arrival=0.0, max_new=2, slo=SLO(0.1, 0.01), emitted=[7, 7])
+    ok.first_token_time = 0.05
+    ok.token_times = [0.05, 0.11]  # both inside the chain
+    late = _req(1, arrival=0.0, max_new=2, slo=SLO(0.1, 0.01), emitted=[7, 7])
+    late.first_token_time = 0.2  # TTFT bust: every token late
+    late.token_times = [0.2, 0.3]
+    free = _req(2, arrival=0.0, max_new=2, emitted=[7, 7])
+    summ = slo_summary([ok, late, free])
+    assert summ.slo_requests == 2 and summ.slo_tokens == 4
+    assert summ.tokens_met == 2 and summ.ttft_met == 1
+    assert summ.attainment == pytest.approx(0.5)
+    assert summ.goodput_under_slo(2.0) == pytest.approx(1.0)
+    assert summ.asdict()["attainment"] == pytest.approx(0.5)
+
+
+def test_slo_summary_vacuous_attainment_without_contracts():
+    summ = slo_summary([_req(0, emitted=[7])])
+    assert summ.slo_tokens == 0 and summ.attainment == 1.0
+    assert summ.goodput_under_slo(1.0) == 0.0
+
+
+def test_headroom_horizon_and_min_deadline():
+    assert min_outstanding_deadline([_req(0)]) == math.inf
+    r = _req(1, arrival=0.0, slo=SLO(0.1, 0.01))
+    assert min_outstanding_deadline([r, _req(0)]) == pytest.approx(0.1)
+    # deadline-free cluster reads the horizon minus backlog drain time
+    h = slo_headroom(
+        math.inf, sim_time=2.0, outstanding_tokens=100, time_per_token=0.01
+    )
+    assert h == pytest.approx(DEADLINE_HORIZON - 1.0)
+    assert slo_headroom(2.5, 2.0, 100, 0.01) == pytest.approx(0.5 - 1.0)
+
+
+# ------------------------------------------------- from_args translation --
+
+
+def test_engine_config_from_args_matches_parser_defaults():
+    args = build_parser().parse_args([])
+    ecfg = EngineConfig.from_args(args)
+    assert ecfg.gamma == 4 and ecfg.gamma_policy == "fixed"
+    assert ecfg.capacity == args.requests  # --capacity unset
+    assert ecfg.kv_layout == "paged" and ecfg.block_size == 16
+    assert ecfg.slo_aware is False  # --slo-profile off
+    ecfg = EngineConfig.from_args(
+        build_parser().parse_args(["--slo-profile", "interactive", "--capacity", "5"])
+    )
+    assert ecfg.slo_aware is True and ecfg.capacity == 5
+
+
+def test_scheduler_config_from_args_resolves_worst_case_gamma():
+    args = build_parser().parse_args(["--gamma-policy", "adaptive", "--gamma", "3"])
+    scfg = SchedulerConfig.from_args(args)
+    assert scfg.gamma == 6  # 2 * gamma, no --gamma-max
+    assert scfg.slo_aware is False
+    args = build_parser().parse_args(
+        [
+            "--gamma-policy",
+            "adaptive",
+            "--gamma",
+            "3",
+            "--gamma-max",
+            "5",
+            "--slo-profile",
+            "strict",
+        ]
+    )
+    scfg = SchedulerConfig.from_args(args, capacity=2, kv_budget=64)
+    assert scfg.gamma == 5 and scfg.capacity == 2 and scfg.kv_budget == 64
+    assert scfg.slo_aware is True
+
+
+def test_router_config_from_args():
+    assert RouterConfig.from_args(build_parser().parse_args([])).policy == "lot"
+    args = build_parser().parse_args(["--router-policy", "slo"])
+    assert RouterConfig.from_args(args).policy == "slo"
+    with pytest.raises(ValueError, match="unknown router policy"):
+        RouterConfig(policy="nope")
+
+
+@pytest.mark.parametrize(
+    "flags,match",
+    [
+        (["--block-size", "0"], "--block-size"),
+        (["--token-budget", "0"], "--token-budget"),
+        (["--gamma", "0"], "--gamma"),
+        (["--prefill-chunk", "-1"], "--prefill-chunk"),
+        (
+            [
+                "--spec-shape",
+                "tree",
+                "--gamma-policy",
+                "adaptive",
+                "--gamma-max",
+                "40",
+                "--spec-branch",
+                "8",
+            ],
+            "tree nodes",
+        ),
+    ],
+)
+def test_engine_config_from_args_rejects_invalid_combos(flags, match):
+    args = build_parser().parse_args(flags)
+    with pytest.raises(ValueError, match=match):
+        EngineConfig.from_args(args)
+
+
+# ------------------------------------------------------ engine contracts --
+
+
+@pytest.fixture(scope="module")
+def models():
+    key = jax.random.PRNGKey(0)
+    cfg_llm = registry.reduced_for(
+        "llama-7b", d_model=96, n_heads=4, n_kv_heads=4, vocab_size=VOCAB
+    )
+    llm = sd.Bundle(cfg_llm, T.init_params(cfg_llm, key))
+    ssms = []
+    for i, (d, L) in enumerate([(32, 1), (64, 2)]):
+        c = registry.reduced_for(
+            "llama-68m",
+            d_model=d,
+            n_heads=4,
+            n_kv_heads=4,
+            vocab_size=VOCAB,
+            n_layers=L,
+        )
+        ssms.append(sd.Bundle(c, T.init_params(c, jax.random.PRNGKey(i + 1))))
+    return llm, ssms
+
+
+def _engine(models, *, slo_aware, **kw):
+    llm, ssms = models
+    cap = kw.pop("capacity", 4)
+    sel = LBSS(
+        SelectorConfig(
+            n_ssms=len(ssms), batch_limits=[cap] * 2, alpha=4, beta=2, seed=0
+        )
+    )
+    ecfg = EngineConfig(
+        gamma=3,
+        max_len=128,
+        capacity=cap,
+        packed_bucket=128,
+        straggler_mitigation=False,
+        slo_aware=slo_aware,
+        **kw,
+    )
+    return SpinEngine(llm, ssms, sel, ecfg)
+
+
+def _workload(profile):
+    return make_workload(
+        "mix",
+        6,
+        VOCAB,
+        seed=3,
+        scale=0.25,
+        arrival_rate=400.0,
+        slo_profile=profile,
+        slo_scale=2.0,
+    )
+
+
+_CHUNKED = dict(
+    gamma_policy="adaptive",
+    gamma_max=4,
+    prefill_chunk=8,
+    token_budget=30,
+    kv_budget=256,
+)
+
+
+@pytest.mark.parametrize("kw", [{}, _CHUNKED], ids=["plain", "chunked-adaptive"])
+def test_stamped_blind_engine_bit_identical_to_unstamped(models, kw):
+    """``--slo-profile off`` contract, engine half: a stamped stream run
+    deadline-blind produces the exact pre-SLO timeline — same tokens AND
+    same sim clock as the unstamped default engine."""
+    ref = _engine(models, slo_aware=True, **kw)  # unstamped = PR 8
+    ref.add_requests(_workload("off"))
+    ref.run(max_slots=600)
+    blind = _engine(models, slo_aware=False, **kw)
+    blind.add_requests(_workload("interactive"))
+    blind.run(max_slots=600)
+    assert blind.sim_time == ref.sim_time
+    for rid, r in ref.requests.items():
+        assert blind.requests[rid].emitted == r.emitted
+    assert blind.accepted_tokens == ref.accepted_tokens
+
+
+def test_slo_aware_engine_lossless_and_stamps_token_times(models):
+    """Deadline-aware scheduling reorders work, never changes outputs:
+    the aware run emits exactly the blind run's tokens per request, and
+    every emitted token carries a sim-clock stamp (monotone, >= arrival,
+    first stamp == first_token_time)."""
+    blind = _engine(models, slo_aware=False, **_CHUNKED)
+    blind.add_requests(_workload("interactive"))
+    blind.run(max_slots=600)
+    eng = _engine(models, slo_aware=True, **_CHUNKED)
+    eng.add_requests(_workload("interactive"))
+    st = eng.run(max_slots=600)
+    assert st["scheduler"]["finished"] == 6
+    for rid, r in eng.requests.items():
+        assert r.emitted == blind.requests[rid].emitted
+        assert len(r.token_times) == len(r.emitted)
+        assert all(a <= b for a, b in zip(r.token_times, r.token_times[1:]))
+        assert r.token_times[0] >= r.arrival
+        assert r.token_times[0] == pytest.approx(r.first_token_time)
+    summ = st["slo"]
+    assert summ["slo_requests"] == 6
+    assert 0.0 <= summ["attainment"] <= 1.0
+
+
+def test_engine_snapshot_is_typed_and_consistent(models):
+    eng = _engine(models, slo_aware=True)
+    eng.add_requests(_workload("interactive"))
+    snap = eng.snapshot()
+    assert isinstance(snap, EngineStats)
+    with pytest.raises(AttributeError):  # frozen — no loose mutation
+        snap.sim_time = 1.0
+    assert snap.sim_time == eng.sim_time
+    assert snap.scheduler.queue_depth + snap.scheduler.running >= 0
+    assert snap.scheduler.min_deadline < math.inf  # contracts outstanding
+    d = snap.asdict()
+    assert d["scheduler"]["min_deadline"] == snap.scheduler.min_deadline
+    eng.run(max_slots=600)
+    snap = eng.snapshot()
+    assert snap.scheduler.min_deadline == math.inf  # drained
+    assert snap.outstanding_tokens == 0
+
+
+def test_router_slo_policy_deterministic_dispatch(models):
+    def run():
+        engines = [
+            _engine(models, slo_aware=True, capacity=2, kv_budget=256)
+            for _ in range(2)
+        ]
+        router = Router(engines, RouterConfig(policy="slo", seed=5))
+        router.submit(_workload("interactive"))
+        return router.run(max_slots=800)
+
+    a, b = run(), run()
+    assert a["dispatched"] == b["dispatched"]
+    assert sum(a["dispatched"]) == 6 and a["finished"] == 6
+    assert a["slo"]["slo_requests"] == 6
+    # replica_snapshot is the typed view, serialized at the JSON boundary
+    assert [s["replica"] for s in a["replica_snapshot"]] == [0, 1]
+    assert isinstance(SLOSummary(0, 0, 0, 0).attainment, float)
