@@ -28,7 +28,7 @@ from the current run *for a section the current run claims to have run*
 Refreshing the baseline after an intentional perf change::
 
     PYTHONPATH=src python -m benchmarks.run \
-        --sections serving,paged,kernels,chunked,gamma,tree,router,quant,slo \
+        --sections serving,paged,kernels,chunked,gamma,tree,router,quant,slo,elastic \
         --json-path results/BENCH_baseline.json
 """
 
@@ -55,7 +55,17 @@ HIGHER_BETTER = (
     "concurrency",
     "tokens_per",
     "finished",
+    # elastic fleet headline: accepted tokens per replica-second
+    # provisioned (also covers cost_normalized_speedup, the
+    # elastic-vs-static gate ratio)
+    "cost_normalized",
 )
+# Explicitly directionless, checked before the pattern tables: fleet
+# churn/ledger counters describe how much the elastic control plane
+# acted, not a quality axis — more steals is neither a win nor a
+# regression (and replica_seconds only means something relative to the
+# tokens it bought, which cost_normalized_goodput already gates).
+INFORMATIONAL = ("steals", "scale_ups", "scale_downs", "replica_seconds")
 
 
 def parse_metrics(derived: str) -> dict:
@@ -67,6 +77,8 @@ def parse_metrics(derived: str) -> dict:
 def direction(key: str) -> int:
     """-1 lower-is-better, +1 higher-is-better, 0 informational."""
     k = key.lower()
+    if any(k.startswith(p) for p in INFORMATIONAL):
+        return 0
     if any(k.startswith(p) or k.endswith(p) for p in LOWER_BETTER):
         return -1
     if any(k.startswith(p) for p in HIGHER_BETTER):

@@ -33,12 +33,12 @@ def main(argv=None) -> None:
                     help="where to write the JSON record file")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_batching, bench_chunked, bench_gamma,
-                            bench_heterogeneity, bench_kernels, bench_overall,
-                            bench_paged, bench_pipeline, bench_quant,
-                            bench_router, bench_selector, bench_serving,
-                            bench_slo, bench_tree, bench_verification,
-                            roofline)
+    from benchmarks import (bench_batching, bench_chunked, bench_elastic,
+                            bench_gamma, bench_heterogeneity, bench_kernels,
+                            bench_overall, bench_paged, bench_pipeline,
+                            bench_quant, bench_router, bench_selector,
+                            bench_serving, bench_slo, bench_tree,
+                            bench_verification, roofline)
 
     records = []
     section_name = [""]
@@ -65,6 +65,7 @@ def main(argv=None) -> None:
         ("tree speculation", bench_tree.main),
         ("quant kv", bench_quant.main),
         ("router replicas", bench_router.main),
+        ("elastic fleet", bench_elastic.main),
         ("slo goodput", bench_slo.main),
         ("roofline", roofline.main),
     ]

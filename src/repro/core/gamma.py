@@ -91,6 +91,12 @@ class GammaConfig:
     # k + min(branches, k) query tokens (every branch re-verifies its own
     # root copy).  branches=1 is the linear chain: cost k + 1 exactly.
     branches: int = 1
+    # replica-class depth cap (elastic fleet): a prefill-heavy replica
+    # reserves its verify budget for prompt-chunk ingestion, so its
+    # ADAPTIVE grants are clamped to this ceiling (None = no class cap;
+    # the fixed policy ignores it — `--gamma-policy fixed` stays
+    # bit-identical regardless of replica class).
+    depth_cap: Optional[int] = None
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -101,6 +107,8 @@ class GammaConfig:
             raise ValueError("gamma_max must be >= 1")
         if self.branches < 1:
             raise ValueError("branches must be >= 1")
+        if self.depth_cap is not None and self.depth_cap < 1:
+            raise ValueError("depth_cap must be >= 1 (None = uncapped)")
 
 
 def expected_tokens(accept: float, k: int) -> float:
@@ -131,6 +139,7 @@ class GammaController:
         self.depth_sum = 0  # sum of granted depths (mean = sum/grants)
         self.capped = 0  # grants trimmed by the load-aware cap
         self.slo_capped = 0  # grants trimmed by the deadline-headroom cap
+        self.class_capped = 0  # grants trimmed by the replica-class cap
         self.depth_hist: Dict[int, int] = {}  # depth -> grant count
         self._best: Dict[tuple, int] = {}  # (ssm, quantized a) -> depth
 
@@ -203,6 +212,12 @@ class GammaController:
             depths = {rid: self.cfg.gamma for rid in ids}
         else:
             depths = {rid: self._depth_for(rid, assign.get(rid, 0)) for rid in ids}
+            if self.cfg.depth_cap is not None:
+                cap = self.cfg.depth_cap
+                for rid, k in depths.items():
+                    if k > cap:
+                        self.class_capped += k - cap
+                        depths[rid] = cap
             self._apply_slo_cap(depths, assign, slo_slack)
             self._apply_budget_cap(depths, token_budget, reserved_tokens)
         for rid, k in depths.items():
@@ -286,5 +301,6 @@ class GammaController:
             "mean_depth": self.depth_sum / self.grants if self.grants else 0.0,
             "capped": self.capped,
             "slo_capped": self.slo_capped,
+            "class_capped": self.class_capped,
             "depth_hist": dict(sorted(self.depth_hist.items())),
         }

@@ -179,6 +179,69 @@ def poisson_arrivals(n: int, rate: float, seed: int = 0,
     return start + np.cumsum(gaps)
 
 
+def _thinned_arrivals(n: int, rate_fn, rate_max: float, seed: int,
+                      start: float) -> np.ndarray:
+    """First ``n`` arrivals of an inhomogeneous Poisson process with
+    instantaneous rate ``rate_fn(t) <= rate_max``, by Lewis-Shedler
+    thinning: draw candidate arrivals at the constant envelope rate
+    ``rate_max``, keep each with probability ``rate_fn(t) / rate_max``.
+    Exact (not binned), and deterministic from the seed."""
+    if rate_max <= 0:
+        raise ValueError("peak arrival rate must be positive")
+    rng = np.random.default_rng(seed)
+    out = np.empty(n, np.float64)
+    t, k = float(start), 0
+    while k < n:
+        t += rng.exponential(1.0 / rate_max)
+        if rng.random() * rate_max <= rate_fn(t):
+            out[k] = t
+            k += 1
+    return out
+
+
+def diurnal_arrivals(n: int, *, rate_base: float, rate_peak: float,
+                     period: float, seed: int = 0,
+                     start: float = 0.0) -> np.ndarray:
+    """Arrival timestamps under a sinusoidal day/night load curve: the
+    instantaneous rate swings between ``rate_base`` (trough) and
+    ``rate_peak`` (peak) with the given period, starting at the trough —
+    the canonical autoscaling workload (a static fleet sized for the
+    peak idles through every trough; an elastic one follows the curve).
+    """
+    if not 0 < rate_base <= rate_peak:
+        raise ValueError("need 0 < rate_base <= rate_peak")
+    if period <= 0:
+        raise ValueError("period must be positive")
+    mid = 0.5 * (rate_base + rate_peak)
+    amp = 0.5 * (rate_peak - rate_base)
+
+    def rate(t):
+        # -cos: t=0 is the trough, t=period/2 the peak
+        return mid - amp * math.cos(2.0 * math.pi * (t - start) / period)
+
+    return _thinned_arrivals(n, rate, rate_peak, seed, start)
+
+
+def bursty_arrivals(n: int, *, rate_base: float, rate_peak: float,
+                    burst_every: float, burst_len: float, seed: int = 0,
+                    start: float = 0.0) -> np.ndarray:
+    """Arrival timestamps under a square-wave load: quiet ``rate_base``
+    traffic with a ``rate_peak`` burst of length ``burst_len`` every
+    ``burst_every`` seconds (the first burst starts one full quiet gap
+    in).  Stresses scale-up latency and work stealing: a burst lands on
+    whatever fleet the trough left behind."""
+    if not 0 < rate_base <= rate_peak:
+        raise ValueError("need 0 < rate_base <= rate_peak")
+    if burst_every <= 0 or not 0 < burst_len <= burst_every:
+        raise ValueError("need 0 < burst_len <= burst_every")
+
+    def rate(t):
+        phase = (t - start) % burst_every
+        return rate_peak if phase >= burst_every - burst_len else rate_base
+
+    return _thinned_arrivals(n, rate, rate_peak, seed, start)
+
+
 def assign_arrivals(reqs: List[Request], *, rate: Optional[float] = None,
                     trace: Optional[np.ndarray] = None,
                     seed: int = 0) -> List[Request]:

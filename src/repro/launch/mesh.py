@@ -70,3 +70,31 @@ def replica_submeshes(mesh) -> List[jax.sharding.Mesh]:
     if len(parts) == 1 and "replica" not in mesh.axis_names:
         return [mesh]
     return [jax.sharding.Mesh(p, names) for p in parts]
+
+
+def elastic_replica_submeshes(mesh, replicas_max: int
+                              ) -> List[jax.sharding.Mesh]:
+    """Pre-carve the MAXIMUM fleet's sub-meshes for the elastic router.
+
+    Device meshes cannot be re-carved while engines hold sharded arrays
+    on them, so autoscaling provisions capacity the same way real fleets
+    do: the full ``replicas_max`` device slice is reserved up front, one
+    sub-mesh (and one standby engine) per slot, and the router's
+    lifecycle states — not the mesh — decide which slots are serving.
+    The *provisioning ledger* (FleetStats.provisioned_s) then charges
+    only active sim-seconds, the honest cost an operator who can
+    release idle slices back to the pool would pay.
+
+    The mesh's replica axis must carry exactly ``replicas_max`` slots —
+    a mismatch means the launch carved a different fleet than the
+    router was configured for, which would mispair engines and device
+    slices silently."""
+    if replicas_max < 1:
+        raise ValueError("replicas_max must be >= 1")
+    subs = replica_submeshes(mesh)
+    if len(subs) != replicas_max:
+        raise ValueError(
+            f"mesh carves {len(subs)} replica sub-meshes but the elastic "
+            f"fleet needs replicas_max={replicas_max} — launch with "
+            f"--replicas equal to --replicas-max")
+    return subs

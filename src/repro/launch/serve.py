@@ -36,11 +36,13 @@ from repro.core import decompose as D
 from repro.core import spec_decode as sd
 from repro.core.selector import (LBSS, EpsilonGreedy, GreedyPromptLength,
                                  SelectorConfig)
-from repro.data.workloads import make_workload
+from repro.data.workloads import (bursty_arrivals, diurnal_arrivals,
+                                  make_workload)
 from repro.models import transformer as T
 from repro.models.config import reduced
 from repro.serving.engine import EngineConfig, SpinEngine
-from repro.serving.router import Router, RouterConfig
+from repro.serving.router import (CLASS_KV_WEIGHTS, Router, RouterConfig,
+                                  class_engine_config, parse_replica_classes)
 
 
 def build_zoo(vocab: int, seed: int = 0, n_ssms: int = 3):
@@ -80,6 +82,23 @@ def split_evenly(total: int, n: int):
     usable share (serve.py errors out for both budgets)."""
     base, rem = divmod(int(total), n)
     return [base + (1 if i < rem else 0) for i in range(n)]
+
+
+def split_weighted(total: int, weights):
+    """Split an aggregate resource proportionally to integer weights
+    (largest-remainder rounding, ties to the lower index) — the
+    heterogeneous-fleet KV split: a ``decode`` replica holds
+    long-resident contexts and takes a bigger share than a ``prefill``
+    replica that turns its cache over per chunk."""
+    wsum = sum(weights)
+    raw = [int(total) * w / wsum for w in weights]
+    shares = [int(x) for x in raw]
+    rem = int(total) - sum(shares)
+    order = sorted(range(len(weights)),
+                   key=lambda i: (-(raw[i] - shares[i]), i))
+    for i in order[:rem]:
+        shares[i] += 1
+    return shares
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -202,6 +221,51 @@ def build_parser() -> argparse.ArgumentParser:
                     help="multiply every --slo-profile deadline (>1 lax, "
                          "<1 strict) — one profile serves "
                          "differently-calibrated cost models")
+    ap.add_argument("--arrival-pattern", default="poisson",
+                    choices=["poisson", "diurnal", "bursty"],
+                    help="shape of the --arrival-rate stream: poisson = "
+                         "constant-rate (default); diurnal = sinusoidal "
+                         "day/night curve between --arrival-rate (peak) "
+                         "and a fifth of it (trough); bursty = quiet "
+                         "baseline with periodic full-rate bursts — the "
+                         "autoscaling workloads (data/workloads.py "
+                         "diurnal_arrivals / bursty_arrivals); both need "
+                         "--arrival-rate")
+    ap.add_argument("--autoscale", default="off",
+                    choices=["off", "target-occupancy"],
+                    help="elastic fleet control (serving/router.py): off "
+                         "(default) keeps every replica serving for the "
+                         "whole run, bit-identical to the pre-elastic "
+                         "router; target-occupancy scales the active set "
+                         "between --replicas-min and --replicas-max "
+                         "against mean KV occupancy, backlog and SLO "
+                         "headroom, with drain-before-retire")
+    ap.add_argument("--replicas-min", type=int, default=1,
+                    help="smallest active fleet the autoscaler may drain "
+                         "down to (only with --autoscale)")
+    ap.add_argument("--replicas-max", type=int, default=None,
+                    help="largest active fleet the autoscaler may grow to; "
+                         "this many engines and mesh sub-slices are "
+                         "pre-carved up front (idle ones cost nothing on "
+                         "the provisioning ledger); default: --replicas")
+    ap.add_argument("--steal", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="work stealing of queued, not-yet-prefilled "
+                         "requests from hot replicas to the least-loaded "
+                         "one when re-prefilling there beats the expected "
+                         "wait (no KV migrates); auto (default) = on "
+                         "exactly when --autoscale is")
+    ap.add_argument("--replica-classes", default="",
+                    help="heterogeneous fleet spec, e.g. "
+                         "'prefill:1,decode:3': per-class engine configs "
+                         "(prefill-heavy: forced chunking + doubled "
+                         "--token-budget + shallow adaptive speculation; "
+                         "decode: KV-weighted share of --kv-budget) with "
+                         "class-affine dispatch — long-prompt requests "
+                         "prefer prefill replicas, long-output ones "
+                         "decode replicas; empty (default) = homogeneous "
+                         "fleet, bit-identical to no classes; the spec's "
+                         "total must match --replicas when both are given")
     return ap
 
 
@@ -227,46 +291,102 @@ def main(argv=None):
     if args.slo_scale <= 0:
         ap.error("--slo-scale must be positive")
 
+    # fleet shape: --replica-classes may define the replica count on its
+    # own (--replicas 1 default), and the elastic fleet pre-carves
+    # --replicas-max engines up front (launch.mesh.elastic_replica_
+    # submeshes on a pod) — standby engines cost nothing on the
+    # provisioning ledger until the autoscaler activates them
+    classes = parse_replica_classes(args.replica_classes)
+    n_rep = args.replicas
+    if classes:
+        if args.replicas != 1 and len(classes) != args.replicas:
+            ap.error(f"--replica-classes carves {len(classes)} replicas "
+                     f"but --replicas says {args.replicas} — drop one "
+                     "flag or make them agree")
+        n_rep = len(classes)
+    n_eng = args.replicas_max if args.replicas_max is not None else n_rep
+    if n_eng < n_rep:
+        ap.error(f"--replicas-max {n_eng} is below the fleet size "
+                 f"{n_rep}")
+    if classes and len(classes) != n_eng:
+        ap.error(f"--replica-classes carves {len(classes)} replicas but "
+                 f"the pre-carved fleet is {n_eng} (--replicas-max) — "
+                 "give every slot a class")
+    if args.replicas_min > n_eng:
+        ap.error(f"--replicas-min {args.replicas_min} exceeds the "
+                 f"pre-carved fleet of {n_eng}")
+    if not classes:
+        classes = ["general"] * n_eng
+
+    arrival_rate, arrival_trace = args.arrival_rate, None
+    if args.arrival_pattern != "poisson":
+        if args.arrival_rate is None:
+            ap.error("--arrival-pattern diurnal/bursty needs "
+                     "--arrival-rate (the peak rate)")
+        # span: the seconds a constant peak-rate stream would cover;
+        # diurnal runs ~one day/night cycle over ~2x that, bursty fires
+        # one burst per span
+        span = args.requests / args.arrival_rate
+        if args.arrival_pattern == "diurnal":
+            arrival_trace = diurnal_arrivals(
+                args.requests, rate_base=args.arrival_rate / 5.0,
+                rate_peak=args.arrival_rate, period=2.0 * span,
+                seed=args.seed ^ 0xD1A)
+        else:
+            arrival_trace = bursty_arrivals(
+                args.requests, rate_base=args.arrival_rate / 5.0,
+                rate_peak=args.arrival_rate, burst_every=span,
+                burst_len=span / 4.0, seed=args.seed ^ 0xB5B)
+        arrival_rate = None
+
     llm, ssms = build_zoo(args.vocab, args.seed, args.n_ssms)
     reqs = make_workload(args.dataset, args.requests, args.vocab,
                          seed=args.seed, scale=args.scale,
-                         arrival_rate=args.arrival_rate,
+                         arrival_rate=arrival_rate,
+                         arrival_trace=arrival_trace,
                          slo_profile=args.slo_profile,
                          slo_scale=args.slo_scale)
     capacity = base_ecfg.capacity
-    n_rep = args.replicas
-    if n_rep > capacity:
-        ap.error(f"--replicas {n_rep} exceeds the aggregate --capacity "
+    if n_eng > capacity:
+        ap.error(f"a fleet of {n_eng} exceeds the aggregate --capacity "
                  f"{capacity}: every replica needs at least one pool row")
-    if (n_rep > 1 and args.kv_budget is not None
-            and args.kv_budget < n_rep * args.block_size):
+    if (n_eng > 1 and args.kv_budget is not None
+            and args.kv_budget < n_eng * args.block_size):
         ap.error(f"--kv-budget {args.kv_budget} is below one "
                  f"--block-size ({args.block_size}) block per replica: "
                  "a zero-block share degenerates that replica to "
                  "one-request-at-a-time service")
 
-    def make_engine(cap: int, kv_budget, seed: int) -> SpinEngine:
+    def make_engine(cap: int, kv_budget, seed: int, cls: str) -> SpinEngine:
         sel = make_selector(args.selector, len(ssms), cap,
                             {r.rid: r.prompt_len for r in reqs}, seed,
                             group_of={r.rid: r.dataset for r in reqs})
-        ecfg = dataclasses.replace(base_ecfg, capacity=cap,
-                                   kv_budget=kv_budget, seed=seed)
+        ecfg = dataclasses.replace(
+            class_engine_config(base_ecfg, cls),
+            capacity=cap, kv_budget=kv_budget, seed=seed)
         return SpinEngine(llm, ssms, sel, ecfg)
 
-    if n_rep > 1 or args.router_policy is not None:
-        # multi-replica path: aggregate capacity / KV budget split evenly;
-        # the zoo's Bundles (weights + jit caches) are shared, pools and
+    if (n_eng > 1 or args.router_policy is not None
+            or args.autoscale != "off"):
+        # multi-replica path: aggregate capacity / KV budget split across
+        # the pre-carved fleet (evenly, or KV-weighted by class); the
+        # zoo's Bundles (weights + jit caches) are shared, pools and
         # selectors are per replica
-        caps = split_evenly(capacity, n_rep)
-        kvs = (split_evenly(args.kv_budget, n_rep)
-               if args.kv_budget is not None else [None] * n_rep)
-        engines = [make_engine(caps[i], kvs[i], args.seed)
-                   for i in range(n_rep)]
+        caps = split_evenly(capacity, n_eng)
+        if args.kv_budget is None:
+            kvs = [None] * n_eng
+        elif any(c != "general" for c in classes):
+            kvs = split_weighted(args.kv_budget,
+                                 [CLASS_KV_WEIGHTS[c] for c in classes])
+        else:
+            kvs = split_evenly(args.kv_budget, n_eng)
+        engines = [make_engine(caps[i], kvs[i], args.seed, classes[i])
+                   for i in range(n_eng)]
         router = Router(engines, rcfg)
         router.submit(reqs)
         stats = router.run(max_slots=args.max_slots)
     else:
-        eng = make_engine(capacity, args.kv_budget, args.seed)
+        eng = make_engine(capacity, args.kv_budget, args.seed, classes[0])
         eng.add_requests(reqs)
         stats = eng.run(max_slots=args.max_slots)
     print(json.dumps(stats, indent=2, default=str))

@@ -154,6 +154,15 @@ class EngineConfig:
     # SLO-free workload is bit-identical to False — the
     # `--slo-profile off` contract.
     slo_aware: bool = True
+    # heterogeneous replica class (elastic fleet, serving/router.py):
+    # "general" serves everything (the default, bit-identical to the
+    # class-free engine); "prefill" is tuned for prompt ingestion (the
+    # router steers long-prompt requests here and ADAPTIVE gamma grants
+    # are capped shallow so verify budget feeds chunks); "decode" is
+    # tuned for flat TPOT on short-prompt/long-output streams.  The class
+    # itself never changes engine semantics — only which knob preset the
+    # router carves (see router.class_engine_config) plus the gamma cap.
+    replica_class: str = "general"
 
     @classmethod
     def from_args(cls, args, *, capacity=None, kv_budget=None, seed=None):
@@ -338,9 +347,20 @@ class SpinEngine:
             ssm_time_per_token=[1e-4 * (j + 1) for j in range(len(ssms))],
             ssm_fixed=[2e-4] * len(ssms),
             llm_fixed=1e-3, llm_time_per_token=5e-4, gamma=ecfg.gamma)
+        if ecfg.replica_class not in ("general", "prefill", "decode"):
+            raise ValueError(
+                f"unknown replica_class {ecfg.replica_class!r} "
+                "(general | prefill | decode)")
+        # prefill-class replicas keep adaptive speculation shallow: their
+        # verify budget belongs to prompt chunks, and requests routed here
+        # are about to be handed off anyway.  Fixed policy ignores the cap
+        # (bit-identity contract of --gamma-policy fixed).
+        depth_cap = (max(1, math.ceil(self.gamma_max / 2))
+                     if ecfg.replica_class == "prefill" else None)
         self.gamma_ctl = GammaController(
             GammaConfig(policy=ecfg.gamma_policy, gamma=ecfg.gamma,
-                        gamma_max=self.gamma_max, branches=self.branches),
+                        gamma_max=self.gamma_max, branches=self.branches,
+                        depth_cap=depth_cap),
             self.cost, selector)
         self.failed_ssms: set = set()
         self.requests: Dict[int, Request] = {}
@@ -466,6 +486,28 @@ class SpinEngine:
                     f"gamma_max+1) > max_len={self.max_len}")
         self.scheduler.submit(reqs)
         self._schedule()
+
+    def release_queued(self, rids: Optional[Sequence[int]] = None, *,
+                       include_pending: bool = False) -> List[Request]:
+        """Hand queued (rowless) requests off to another replica — the
+        work-stealing / drain release hook.  Only waiting requests (and,
+        with ``include_pending``, not-yet-arrived ones — the drain case)
+        leave; row owners keep decoding here.  A released request holds
+        no pool row and therefore no KV on this engine — the target
+        re-prefills its context from the ``Request`` itself, so there is
+        no stale cache to migrate or corrupt.  The rid is scrubbed from
+        every engine-side index so fleet-level stats (which union
+        ``requests`` across replicas) count it exactly once, at whichever
+        replica finishes it."""
+        out = self.scheduler.release_queued(rids,
+                                            include_pending=include_pending)
+        for r in out:
+            assert not self.llm_pool.has(r.rid), \
+                f"released request {r.rid} still owns a KV row"
+            self.requests.pop(r.rid, None)
+            self._unstamped.discard(r.rid)
+            self._accept_by_req.pop(r.rid, None)
+        return out
 
     def _schedule(self, grant_prefill: bool = False):
         """Ask the scheduler for this instant's decision and apply it:

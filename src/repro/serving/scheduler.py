@@ -239,6 +239,7 @@ class ContinuousScheduler:
         self.finished: List[int] = []
         self.preemptions = 0
         self.admissions = 0
+        self.stolen = 0                    # queued requests released away
         self.prefill_grants = 0            # chunk grants issued
         self.prefill_tokens = 0            # prompt tokens granted in chunks
         self._wait_since: Dict[int, float] = {}   # rid -> enqueue clock
@@ -298,6 +299,51 @@ class ContinuousScheduler:
 
     def next_arrival(self) -> Optional[float]:
         return self._pending[0][0] if self._pending else None
+
+    # ------------------------------------------------- steal / requeue --
+    def steal_candidates(self) -> List[Request]:
+        """Queued requests another replica could serve from scratch:
+        arrived but rowless (``waiting``) — no KV, no partial prefill, so
+        migration is a plain re-submission.  Worst-ranked first: the
+        request that would wait longest here gains most from moving."""
+        return list(reversed(self.waiting))
+
+    def release_queued(self, rids: Optional[Sequence[int]] = None, *,
+                       include_pending: bool = False) -> List[Request]:
+        """Remove queued (rowless) requests from this scheduler and return
+        them for hand-off to another replica — the work-stealing / drain
+        hook.  ``rids=None`` releases every waiting request;
+        ``include_pending`` also releases not-yet-arrived requests
+        (drain-before-retire hands the whole queue off).  Row owners
+        (running/prefilling) are never released — their KV lives here.
+
+        Accrued queue wait is NOT charged at the source: the request's
+        ``arrival`` rides with it, and the receiving scheduler's
+        :meth:`poll` re-charges the full arrival->admission wait there,
+        so fleet-level queue_wait counts each wait exactly once."""
+        want = None if rids is None else set(rids)
+        out: List[Request] = []
+        kept: List[Request] = []
+        for r in self.waiting:
+            if want is None or r.rid in want:
+                out.append(r)
+            else:
+                kept.append(r)
+        self.waiting = kept
+        if include_pending:
+            still = []
+            for arrival, seq, r in self._pending:
+                if want is None or r.rid in want:
+                    out.append(r)
+                else:
+                    still.append((arrival, seq, r))
+            if len(still) != len(self._pending):
+                self._pending = still
+                heapq.heapify(self._pending)
+        for r in out:
+            self._wait_since.pop(r.rid, None)
+        self.stolen += len(out)
+        return out
 
     # ----------------------------------------------------------- policy --
     def kv_need(self, r: Request) -> int:
@@ -507,11 +553,13 @@ class ContinuousScheduler:
         most urgent outstanding next-token deadline."""
         return SchedulerStats(
             queue_depth=self.queue_depth,
+            waiting=len(self.waiting),
             running=len(self.running),
             prefilling=len(self.prefilling),
             admissions=self.admissions,
             preemptions=self.preemptions,
             finished=len(self.finished),
+            stolen=self.stolen,
             queue_wait=self.queue_wait,
             min_deadline=min_outstanding_deadline(
                 self.outstanding_requests()),
@@ -526,6 +574,7 @@ class ContinuousScheduler:
             "admissions": self.admissions,
             "preemptions": self.preemptions,
             "finished": len(self.finished),
+            "stolen": self.stolen,
             "queue_wait": self.queue_wait,
             "prefill_chunk": self.cfg.prefill_chunk,
             "prefill_grants": self.prefill_grants,

@@ -45,11 +45,15 @@ from repro.data.workloads import Request
 class SchedulerStats:
     """One scheduler's live state: the queue/lifecycle view."""
     queue_depth: int           # waiting + not-yet-arrived pending
+    waiting: int               # arrived, rowless — the live backlog the
+    #                            autoscaler reads (pending future arrivals
+    #                            are not pressure yet)
     running: int               # row owners (prefilling included)
     prefilling: int            # subset of running still ingesting context
     admissions: int
     preemptions: int
     finished: int
+    stolen: int                # queued requests released to another replica
     queue_wait: float
     # most urgent next-token deadline over everything this scheduler
     # still owes (running + waiting + pending); +inf when no outstanding
@@ -86,6 +90,45 @@ class ReplicaStats:
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetStats:
+    """The elastic control plane's fleet-level view: every replica's
+    snapshot tagged with its lifecycle state, plus the provisioning
+    ledger the cost-normalized-goodput metric is computed from.
+
+    ``states[i]`` is one of ``active`` (serving, dispatch-eligible),
+    ``draining`` (finishing in-flight work, excluded from new
+    admissions) or ``standby`` (retired or never activated — idle,
+    unprovisioned).  ``provisioned_s[i]`` is the sim-clock seconds
+    replica ``i`` has been provisioned (activation to retirement, open
+    segments credited to the fleet clock), the denominator an
+    autoscaling operator pays for."""
+    replicas: tuple            # tuple of ReplicaStats, one per replica
+    states: tuple              # per-replica lifecycle state strings
+    classes: tuple             # per-replica class names ("general", ...)
+    active: int                # replicas currently dispatch-eligible
+    provisioned_s: tuple       # per-replica provisioned sim-seconds
+    steals: int                # queued requests migrated between replicas
+    scale_ups: int
+    scale_downs: int
+
+    @property
+    def replica_seconds(self) -> float:
+        """Total replica-seconds provisioned — the cost denominator."""
+        return float(sum(self.provisioned_s))
+
+    def cost_normalized_goodput(self, accepted_tokens: int) -> float:
+        """Accepted tokens per replica-second provisioned: the number an
+        autoscaling operator optimizes (raw goodput at half the fleet
+        cost doubles it; over-provisioning dilutes it)."""
+        return accepted_tokens / max(self.replica_seconds, 1e-9)
+
+    def asdict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["replica_seconds"] = self.replica_seconds
+        return d
 
 
 # --------------------------------------------------------- SLO metrics --
@@ -174,7 +217,7 @@ def expected_time_per_token(sim_time: float, accepted_tokens: int,
 
 
 __all__ = [
-    "SchedulerStats", "EngineStats", "ReplicaStats", "SLOSummary",
-    "slo_summary", "min_outstanding_deadline", "slo_headroom",
-    "expected_time_per_token", "DEADLINE_HORIZON",
+    "SchedulerStats", "EngineStats", "ReplicaStats", "FleetStats",
+    "SLOSummary", "slo_summary", "min_outstanding_deadline",
+    "slo_headroom", "expected_time_per_token", "DEADLINE_HORIZON",
 ]
